@@ -1,0 +1,42 @@
+"""SPMD superstep engine: expansion throughput + collective-traffic budget
+per round vs worker count (the TPU-adaptation counterpart of Table 1)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.engine import solve
+from repro.graphs.generators import erdos_renyi
+from repro.problems.sequential import solve_sequential
+
+
+def run(csv=True):
+    g = erdos_renyi(48, 0.25, 2)
+    want, _, _ = solve_sequential(g)
+    rows = []
+    for p in (2, 4, 8):
+        for policy in (True, False):
+            r = solve(g, num_workers=p, steps_per_round=8, policy_priority=policy)
+            assert r.best_size == want
+            rows.append(
+                dict(
+                    workers=p,
+                    policy="priority" if policy else "round_robin",
+                    rounds=r.rounds,
+                    nodes=r.nodes_expanded,
+                    transfers=r.tasks_transferred,
+                    nodes_per_round=round(r.nodes_expanded / r.rounds, 1),
+                    control_B_per_round=r.control_bytes_per_round,
+                    transfer_B_per_round=r.transfer_bytes_per_round,
+                )
+            )
+    if csv:
+        keys = list(rows[0].keys())
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(str(r[k]) for k in keys))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

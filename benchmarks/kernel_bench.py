@@ -1,0 +1,48 @@
+"""Kernel micro-bench: wall time of the jnp oracle vs interpret-mode kernels
+is NOT meaningful on CPU; instead report the kernels' arithmetic-intensity
+characteristics (the roofline inputs a TPU run would see)."""
+
+from __future__ import annotations
+
+
+def run(csv=True):
+    rows = []
+    # bitset degrees: T tasks × n vertices × W words
+    for n, T in ((512, 64), (1024, 64)):
+        W = (n + 31) // 32
+        flops = T * n * W * 3  # and + popcount-adds (SWAR ~3 vector ops/word)
+        bytes_moved = (n * W + T * W + T * n * 4) * 4
+        rows.append(
+            dict(kernel="bitset_degrees", shape=f"n{n}xT{T}",
+                 vector_ops=flops, bytes=bytes_moved,
+                 intensity=round(flops / bytes_moved, 3))
+        )
+    # flash attention: per (B,H) S×S blockwise
+    for S, D in ((4096, 128), (32768, 128)):
+        flops = 4 * S * S * D  # qk + pv
+        bytes_moved = 3 * S * D * 2 + S * D * 2
+        rows.append(
+            dict(kernel="flash_attention", shape=f"S{S}xD{D}",
+                 vector_ops=flops, bytes=bytes_moved,
+                 intensity=round(flops / bytes_moved, 1))
+        )
+    # wkv6 chunked: per (B,H), T steps, K=V=64, chunk C
+    for T, C in ((4096, 32),):
+        K = 64
+        flops = T * (3 * C * K + 2 * K * K)  # intra scores + state updates
+        bytes_moved = T * (4 * K) * 4 + (K * K) * 4
+        rows.append(
+            dict(kernel="wkv6", shape=f"T{T}xC{C}",
+                 vector_ops=flops, bytes=bytes_moved,
+                 intensity=round(flops / bytes_moved, 1))
+        )
+    if csv:
+        keys = list(rows[0].keys())
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(str(r[k]) for k in keys))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Render the §Roofline table from dry-run JSON results.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun_single.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:7.2f}s "
+    return f"{x * 1e3:7.1f}ms"
+
+
+def render(path: str, md: bool = False):
+    with open(path) as f:
+        results = json.load(f)
+    results.sort(key=lambda r: (r["arch"], r["shape"]))
+    sep = "|" if md else " "
+    hdr = [
+        "arch", "shape", "status", "compute", "memory", "collect",
+        "dominant", "mfu%", "useful", "temp_GiB", "args_GiB",
+    ]
+    lines = [sep.join(f"{h:>12s}" for h in hdr)]
+    if md:
+        lines.append(sep.join(["---"] * len(hdr)))
+    for r in results:
+        if r["status"] != "OK":
+            lines.append(
+                sep.join(
+                    [f"{r['arch']:>12s}", f"{r['shape']:>12s}",
+                     f"{r['status']:>12s}",
+                     f"{r.get('reason', r.get('traceback', ''))[:60]:>12s}"]
+                )
+            )
+            continue
+        rl = r["roofline"]
+        mem = r.get("memory", {})
+        mfu = 100.0 * rl["model_flops_per_dev"] / 197e12 / rl["bound_s"] if rl["bound_s"] else 0
+        lines.append(
+            sep.join(
+                [
+                    f"{r['arch']:>12.12s}",
+                    f"{r['shape']:>12s}",
+                    f"{'OK':>12s}",
+                    f"{fmt_s(rl['compute_s']):>12s}",
+                    f"{fmt_s(rl['memory_s']):>12s}",
+                    f"{fmt_s(rl['collective_s']):>12s}",
+                    f"{rl['dominant']:>12s}",
+                    f"{mfu:>12.1f}",
+                    f"{rl['useful_flop_ratio']:>12.2f}",
+                    f"{mem.get('temp_size_b', 0) / 2**30:>12.2f}",
+                    f"{mem.get('argument_size_b', 0) / 2**30:>12.2f}",
+                ]
+            )
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(render(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_single.json"))

@@ -1,0 +1,46 @@
+"""Benchmark harness: one module per paper table/figure (+ beyond-paper).
+
+  speedup           Fig. 4 / Table 1 (semi vs central x encodings)
+  encoding_bytes    §4.3 serialization sizes
+  protocol_stats    §3 message accounting (failed requests == 0)
+  engine_throughput TPU-adapted engine rounds/transfers budget
+  balancer_bench    beyond-paper serving balancer
+  kernel_bench      kernel arithmetic-intensity table
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [name ...]
+"""
+
+import sys
+import time
+
+from benchmarks import (
+    balancer_bench,
+    encoding_bytes,
+    engine_throughput,
+    kernel_bench,
+    protocol_stats,
+    speedup,
+)
+
+ALL = {
+    "encoding_bytes": encoding_bytes,
+    "protocol_stats": protocol_stats,
+    "engine_throughput": engine_throughput,
+    "balancer_bench": balancer_bench,
+    "kernel_bench": kernel_bench,
+    "speedup": speedup,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    for name in names:
+        mod = ALL[name]
+        print(f"== {name} ==")
+        t0 = time.perf_counter()
+        mod.run()
+        print(f"-- {name} done in {time.perf_counter() - t0:.1f}s\n", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Batched serving with the semi-centralized request balancer (beyond-paper
+integration): greedy decode on a smoke model + the balancer keeping 8
+simulated replicas busy under a hot-shard arrival pattern.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import subprocess
+
+
+def main():
+    subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.serve",
+            "--arch", "qwen1.5-0.5b", "--smoke",
+            "--batch", "4", "--prompt-len", "12", "--gen", "24",
+            "--replicas", "8",
+        ],
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        check=True,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""End-to-end training driver with checkpoint/crash/resume demonstration.
+
+Trains a ~100M-class reduced model for a few hundred steps and shows the
+fault-tolerance contract: the resumed run reproduces the uninterrupted loss
+curve exactly.
+
+  PYTHONPATH=src python examples/train_lm.py [arch] [steps]
+"""
+
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.checkpoint.store import wait_for_pending
+from repro.configs.registry import get_smoke_config
+from repro.launch.train import train_loop
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "minitron_4b"
+    steps = int(sys.argv[2]) if len(sys.argv) > 2 else 200
+    cfg = get_smoke_config(arch)
+    print(f"arch={cfg.name} steps={steps}")
+
+    ckdir = tempfile.mkdtemp(prefix="repro_ck_")
+    try:
+        half = steps // 2
+        print(f"\n--- phase 1: train to step {half}, checkpoint, 'crash' ---")
+        _, _, l1 = train_loop(
+            cfg, steps=half, batch=8, seq=128, ckpt_dir=ckdir,
+            ckpt_every=max(half // 4, 1), seed=1, log_every=25,
+        )
+        wait_for_pending()
+        print(f"\n--- phase 2: resume from the latest checkpoint ---")
+        _, _, l2 = train_loop(
+            cfg, steps=steps, batch=8, seq=128, ckpt_dir=ckdir,
+            ckpt_every=10_000, resume=True, seed=1, log_every=25,
+        )
+        print(f"\n--- control: uninterrupted run ---")
+        _, _, lc = train_loop(cfg, steps=steps, batch=8, seq=128, seed=1,
+                              log_every=50)
+        resumed = l1 + l2
+        drift = float(np.abs(np.array(resumed) - np.array(lc)).max())
+        print(f"\nresume-vs-control max loss drift: {drift:.2e} "
+              f"({'EXACT' if drift < 1e-3 else 'MISMATCH'})")
+        print(f"loss: {lc[0]:.3f} -> {lc[-1]:.3f}")
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Checkpoint store: atomic, mesh-agnostic save/restore with async writes.
+
+Layout:  <dir>/step_<N>/  arrays.npz  (flattened pytree leaves)
+                          manifest.msgpack  (treedef paths, shapes, dtypes,
+                                             step, data-pipeline state)
+
+* **atomic**: written to ``step_<N>.tmp`` then renamed — a crash mid-write
+  never corrupts the latest checkpoint (restart resumes from the previous);
+* **mesh-agnostic**: leaves are saved unsharded (device_get) and restored
+  with ``jax.device_put(leaf, sharding)`` against whatever mesh the restart
+  runs on — re-meshing on restart is how elastic scale-up/down works;
+* **async**: ``save_checkpoint(..., blocking=False)`` snapshots to host
+  memory synchronously (cheap) and writes on a daemon thread, overlapping
+  I/O with the next training steps.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+_PENDING: list[threading.Thread] = []
+
+
+def _flatten(tree) -> tuple[list[tuple[str, np.ndarray]], Any]:
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves_with_paths:
+        key = "/".join(str(p) for p in path)
+        out.append((key, np.asarray(jax.device_get(leaf))))
+    return out, jax.tree.structure(tree)
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    tree: Any,
+    extra: Optional[dict] = None,
+    *,
+    blocking: bool = True,
+) -> str:
+    """Snapshot ``tree`` (any pytree of arrays) + ``extra`` metadata."""
+    flat, _ = _flatten(tree)
+    payload = {k: v for k, v in flat}
+    meta = {"step": int(step), "keys": list(payload.keys()), "extra": extra or {}}
+
+    def write():
+        os.makedirs(directory, exist_ok=True)
+        final = os.path.join(directory, f"step_{step}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **payload)
+        with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+            f.write(msgpack.packb(meta))
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if blocking:
+        write()
+    else:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        _PENDING.append(t)
+    return os.path.join(directory, f"step_{step}")
+
+
+def wait_for_pending() -> None:
+    while _PENDING:
+        _PENDING.pop().join()
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(name.split("_", 1)[1])
+        for name in os.listdir(directory)
+        if name.startswith("step_") and not name.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str,
+    template: Any,
+    step: Optional[int] = None,
+    shardings: Any = None,
+):
+    """Restore into the structure of ``template``.  ``shardings`` (optional)
+    mirrors the template with jax.sharding.Sharding leaves — leaves are
+    device_put against them (re-meshing happens here).
+
+    Returns (tree, step, extra).
+    """
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree.structure(template)
+    shard_leaves = (
+        jax.tree.leaves(shardings, is_leaf=lambda x: hasattr(x, "device_set"))
+        if shardings is not None
+        else [None] * len(leaves_with_paths)
+    )
+    restored = []
+    for (path_elems, leaf), shard in zip(leaves_with_paths, shard_leaves):
+        key = "/".join(str(p) for p in path_elems)
+        arr = arrays[key]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        restored.append(
+            jax.device_put(arr, shard) if shard is not None else jax.numpy.asarray(arr)
+        )
+    return jax.tree.unflatten(treedef, restored), meta["step"], meta["extra"]

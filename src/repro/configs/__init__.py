@@ -1,0 +1,14 @@
+"""Assigned-architecture configs (--arch <id>) + the run-config schema."""
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.configs.registry import ALIASES, ARCH_IDS, get_config, get_smoke_config
+
+__all__ = [
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "ARCH_IDS",
+    "ALIASES",
+    "get_config",
+    "get_smoke_config",
+]

@@ -1,0 +1,31 @@
+"""minitron-4b [dense] — pruned nemotron.  32L d=3072 24H kv=8 d_ff=9216
+vocab=256000.  [arXiv:2407.14679]"""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="minitron-4b",
+        family="dense",
+        n_layers=32,
+        d_model=3072,
+        n_heads=24,
+        n_kv_heads=8,
+        d_ff=9216,
+        vocab=256_000,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="minitron-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=48,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=96,
+        vocab=512,
+        dtype="float32",
+    )

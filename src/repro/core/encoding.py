@@ -1,0 +1,119 @@
+"""Task serialization codecs (paper §4.3).
+
+*Basic encoding*: serialize the induced subgraph's full adjacency structure —
+O(n·W) words per task.  This is what made the fully-centralized strategy
+collapse in the paper's experiments (tasks cross the wire twice).
+
+*Optimized encoding*: each worker loads the ORIGINAL graph at startup; a task
+is only the packed bitset of surviving vertices plus the partial-solution
+bitset — O(W) words.  The receiver reconstructs the induced subgraph locally.
+
+Both are implemented so the paper's comparison (Fig. 4 / Table 1) can be
+reproduced; the SPMD engine transfers fixed-shape records, so the codecs below
+also define the exact on-the-wire byte counts used by the communication
+accounting in benchmarks and in the roofline collective term.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.graphs.bitgraph import BitGraph, n_words
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """A search-tree node: induced-subgraph mask + partial solution + depth."""
+
+    mask: np.ndarray  # (W,) uint32 -- vertices still in the instance
+    sol_mask: np.ndarray  # (W,) uint32 -- vertices already in the cover
+    depth: int
+
+    def key(self) -> tuple:
+        return (self.mask.tobytes(), self.sol_mask.tobytes(), self.depth)
+
+
+class OptimizedCodec:
+    """n-bit-mask encoding: 2W words + 1 depth word per task."""
+
+    name = "optimized"
+
+    def __init__(self, n: int):
+        self.n = n
+        self.W = n_words(n)
+
+    @property
+    def record_words(self) -> int:
+        return 2 * self.W + 1
+
+    @property
+    def record_bytes(self) -> int:
+        return 4 * self.record_words
+
+    def encode(self, task: Task) -> np.ndarray:
+        return np.concatenate(
+            [task.mask, task.sol_mask, np.array([task.depth], dtype=np.uint32)]
+        ).astype(np.uint32)
+
+    def decode(self, rec: np.ndarray, graph: BitGraph | None = None) -> Task:
+        W = self.W
+        return Task(
+            mask=rec[:W].astype(np.uint32),
+            sol_mask=rec[W : 2 * W].astype(np.uint32),
+            depth=int(rec[2 * W]),
+        )
+
+
+class BasicCodec:
+    """Adjacency-list encoding: the induced subgraph's rows travel with the
+    task -- (n+2)·W + 1 words.  The decode does NOT need the original graph
+    (that is its only advantage)."""
+
+    name = "basic"
+
+    def __init__(self, n: int):
+        self.n = n
+        self.W = n_words(n)
+
+    @property
+    def record_words(self) -> int:
+        return (self.n + 2) * self.W + 1
+
+    @property
+    def record_bytes(self) -> int:
+        return 4 * self.record_words
+
+    def encode(self, task: Task, graph: BitGraph) -> np.ndarray:
+        sub_adj = (graph.adj & task.mask[None, :]).astype(np.uint32)
+        # zero out rows outside the mask
+        from repro.graphs.bitgraph import unpack_mask
+
+        inside = unpack_mask(task.mask, self.n)
+        sub_adj = np.where(inside[:, None], sub_adj, 0).astype(np.uint32)
+        return np.concatenate(
+            [
+                sub_adj.reshape(-1),
+                task.mask,
+                task.sol_mask,
+                np.array([task.depth], dtype=np.uint32),
+            ]
+        ).astype(np.uint32)
+
+    def decode(self, rec: np.ndarray, graph: BitGraph | None = None) -> Task:
+        n, W = self.n, self.W
+        off = n * W
+        return Task(
+            mask=rec[off : off + W].astype(np.uint32),
+            sol_mask=rec[off + W : off + 2 * W].astype(np.uint32),
+            depth=int(rec[off + 2 * W]),
+        )
+
+
+def make_codec(name: str, n: int):
+    if name == "optimized":
+        return OptimizedCodec(n)
+    if name == "basic":
+        return BasicCodec(n)
+    raise ValueError(f"unknown codec {name!r}")

@@ -1,0 +1,216 @@
+"""Host driver for the SPMD branching engine.
+
+Responsibilities (the paper's startup/termination bookkeeping):
+
+* **startup** (§3.5): expand the root on the host until ≥ P open tasks exist
+  (BFS = the equitable split), order them by the Algorithm-7 waiting-list
+  traversal, and scatter one task per worker (the paper's seed→waiting-list
+  topology);
+* **rounds**: call the jitted superstep until it reports global quiescence
+  (or, in FPT mode, until the global best reaches k);
+* **collect**: the center "knows which worker holds the best solution and
+  fetches it only when the exploration has finished" (§3.1) — we argmin the
+  per-worker local bests once, at the end;
+* **elasticity / fault tolerance**: state is a plain pytree keyed only by
+  (P, capacity, W).  ``snapshot``/``restore`` round-trip it through host
+  memory; ``resize`` re-splits all pending tasks across a NEW worker count,
+  which is how the engine survives losing (or gaining) devices mid-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.superstep import (
+    WorkerState,
+    build_superstep_fn,
+    make_worker_state,
+)
+from repro.core.waiting_list import startup_assignment
+from repro.graphs.bitgraph import BitGraph, n_words
+from repro.problems.sequential import expand_frontier
+from repro.problems.vertex_cover import make_problem
+
+
+@dataclasses.dataclass
+class EngineResult:
+    best_size: int
+    best_sol: Optional[np.ndarray]
+    rounds: int
+    nodes_expanded: int
+    tasks_transferred: int
+    wall_s: float
+    overflow: bool
+    # collective-traffic accounting (bytes) for the roofline / paper §4.3
+    control_bytes_per_round: int
+    transfer_bytes_per_round: int
+
+
+def _scatter_startup(
+    state: WorkerState, g: BitGraph, num_workers: int
+) -> WorkerState:
+    """BFS-split the root into ~P tasks and place them per Algorithm 7 order."""
+    tasks = expand_frontier(g, num_tasks=num_workers)
+    order = startup_assignment(max_b=2, p=num_workers)  # 1-based worker ids
+    masks = np.array(state.frontier.masks)
+    sols = np.array(state.frontier.sols)
+    depths = np.array(state.frontier.depths)
+    active = np.array(state.frontier.active)
+    for i, (mask, sol, depth) in enumerate(tasks):
+        w = (order[i % num_workers] - 1) if i < num_workers else (i % num_workers)
+        # next free slot on worker w
+        slot = int(np.argmin(active[w]))
+        assert not active[w, slot], "startup overflow"
+        masks[w, slot] = mask
+        sols[w, slot] = sol
+        depths[w, slot] = depth
+        active[w, slot] = True
+    return state._replace(
+        frontier=state.frontier._replace(
+            masks=jnp.asarray(masks),
+            sols=jnp.asarray(sols),
+            depths=jnp.asarray(depths),
+            active=jnp.asarray(active),
+        )
+    )
+
+
+def solve(
+    g: BitGraph,
+    num_workers: int = 8,
+    *,
+    steps_per_round: int = 32,
+    lanes: int = 1,
+    policy_priority: bool = True,
+    codec: str = "optimized",
+    packed_status: bool = True,
+    skip_empty_transfer: bool = True,
+    mode: str = "bnb",
+    k: Optional[int] = None,
+    mesh=None,
+    max_rounds: int = 200_000,
+    capacity: Optional[int] = None,
+    initial_state: Optional[WorkerState] = None,
+) -> EngineResult:
+    """Solve minimum vertex cover with P workers (virtual or one-per-device)."""
+    W = n_words(g.n)
+    cap = capacity or (4 * g.n + 8 * lanes)
+    initial_best = g.n + 1 if mode == "bnb" else (k + 1)
+    problem = make_problem(jnp.asarray(g.adj), g.n)
+    pad = (g.n * W) if codec == "basic" else 0  # §4.3 basic encoding payload
+
+    if initial_state is None:
+        state = jax.vmap(lambda _: make_worker_state(cap, W, initial_best))(
+            jnp.arange(num_workers)
+        )
+        state = _scatter_startup(state, g, num_workers)
+    else:
+        state = initial_state
+
+    step_fn = build_superstep_fn(
+        problem,
+        num_workers=num_workers,
+        steps_per_round=steps_per_round,
+        lanes=lanes,
+        policy_priority=policy_priority,
+        transfer_pad_words=pad,
+        packed_status=packed_status,
+        skip_empty_transfer=skip_empty_transfer,
+        mesh=mesh,
+    )
+
+    t0 = time.perf_counter()
+    rounds = 0
+    while rounds < max_rounds:
+        state, done = step_fn(state)
+        rounds += 1
+        if bool(jax.device_get(done)):
+            break
+        if mode == "fpt" and int(jax.device_get(state.best_val.min())) <= k:
+            break
+    wall = time.perf_counter() - t0
+
+    local_bests = np.asarray(jax.device_get(state.local_best_val))
+    wbest = int(np.argmin(local_bests))
+    best_size = int(local_bests[wbest])
+    best_sol = np.asarray(jax.device_get(state.best_sol))[wbest]
+    if mode == "fpt" and best_size > k:
+        best_size, best_sol = -1, None
+    if best_size > g.n:
+        best_sol = None
+
+    rec_words = 2 * W + 1 + pad
+    return EngineResult(
+        best_size=best_size,
+        best_sol=best_sol,
+        rounds=rounds,
+        nodes_expanded=int(np.asarray(state.nodes_expanded).sum()),
+        tasks_transferred=int(np.asarray(state.tasks_sent).sum()),
+        wall_s=wall,
+        overflow=bool(np.asarray(state.frontier.overflow).any()),
+        control_bytes_per_round=4 * (1 if packed_status else 3) * num_workers,
+        transfer_bytes_per_round=4 * rec_words * num_workers,
+        # (all-gather reference path; see EXPERIMENTS.md §Perf for the
+        #  masked-psum alternative that moves only matched records)
+    )
+
+
+# -- elasticity -----------------------------------------------------------------
+
+
+def snapshot(state: WorkerState) -> dict:
+    """Host-side checkpoint of the entire engine state."""
+    return jax.tree.map(np.asarray, state._asdict())
+
+
+def restore(snap: dict) -> WorkerState:
+    return WorkerState(**jax.tree.map(jnp.asarray, snap))
+
+
+def resize(state: WorkerState, new_num_workers: int) -> WorkerState:
+    """Re-split all pending tasks over a different worker count (elastic
+    scale-up/down or failed-node recovery — any device count works because
+    tasks are self-contained records over the original instance)."""
+    masks = np.array(state.frontier.masks)
+    sols = np.array(state.frontier.sols)
+    depths = np.array(state.frontier.depths)
+    active = np.array(state.frontier.active)
+    P_old, cap, W = masks.shape[0], masks.shape[1], masks.shape[2]
+
+    tasks = [
+        (masks[w, s], sols[w, s], depths[w, s])
+        for w in range(P_old)
+        for s in range(cap)
+        if active[w, s]
+    ]
+    best = int(np.asarray(state.local_best_val).min())
+    bw = int(np.argmin(np.asarray(state.local_best_val)))
+    new = jax.vmap(lambda _: make_worker_state(cap, W, best))(
+        jnp.arange(new_num_workers)
+    )
+    nm = np.array(new.frontier.masks)
+    ns = np.array(new.frontier.sols)
+    nd = np.array(new.frontier.depths)
+    na = np.array(new.frontier.active)
+    for i, (m, s, d) in enumerate(tasks):
+        w = i % new_num_workers
+        slot = i // new_num_workers
+        assert slot < cap, "resize: capacity too small for pending tasks"
+        nm[w, slot], ns[w, slot], nd[w, slot], na[w, slot] = m, s, d, True
+    sol = np.asarray(state.best_sol)[bw]
+    return new._replace(
+        frontier=new.frontier._replace(
+            masks=jnp.asarray(nm),
+            sols=jnp.asarray(ns),
+            depths=jnp.asarray(nd),
+            active=jnp.asarray(na),
+        ),
+        best_sol=jnp.broadcast_to(jnp.asarray(sol), new.best_sol.shape),
+        local_best_val=jnp.full((new_num_workers,), best, jnp.int32),
+    )

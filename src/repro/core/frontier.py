@@ -1,0 +1,134 @@
+"""Fixed-capacity per-worker task frontier (device arrays).
+
+The paper's per-thread task tree (§3.4) is a caterpillar: internal nodes are
+the DFS path, leaves are donatable pending tasks.  On a fixed-shape SPMD
+device the same object is a flat pool of (mask, sol, depth) slots with an
+``active`` flag:
+
+* **explore** pops the *deepest* active task (DFS order — the caterpillar
+  spine), so the pool size stays O(depth) like the paper's tree;
+* **donate** pops the *shallowest* active task (the paper's highest-priority
+  leaf, Alg. 6) — quasi-horizontal exploration.
+
+Capacity is sized by the engine to ``4·n`` (depth ≤ n and each expansion is
+net +lanes), and an ``overflow`` flag records any dropped push — tests assert
+it never fires.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BIG_DEPTH = jnp.int32(1 << 30)
+
+
+class Frontier(NamedTuple):
+    masks: jnp.ndarray  # (CAP, W) uint32
+    sols: jnp.ndarray  # (CAP, W) uint32
+    depths: jnp.ndarray  # (CAP,) int32
+    active: jnp.ndarray  # (CAP,) bool
+    overflow: jnp.ndarray  # () bool -- a push was ever dropped
+
+    @property
+    def capacity(self) -> int:
+        return self.depths.shape[0]
+
+    def pending(self) -> jnp.ndarray:
+        return self.active.sum().astype(jnp.int32)
+
+    def top_priority_depth(self) -> jnp.ndarray:
+        """Depth of the shallowest pending task; BIG_DEPTH if empty."""
+        return jnp.where(self.active, self.depths, BIG_DEPTH).min()
+
+
+def make_frontier(capacity: int, W: int) -> Frontier:
+    return Frontier(
+        masks=jnp.zeros((capacity, W), jnp.uint32),
+        sols=jnp.zeros((capacity, W), jnp.uint32),
+        depths=jnp.zeros((capacity,), jnp.int32),
+        active=jnp.zeros((capacity,), bool),
+        overflow=jnp.bool_(False),
+    )
+
+
+def pop_deepest(f: Frontier, count: int):
+    """Pop up to ``count`` deepest tasks (DFS lanes).
+
+    Returns (frontier, masks (count, W), sols (count, W), depths (count,),
+    valid (count,) bool)."""
+    key = jnp.where(f.active, f.depths, jnp.int32(-1))
+    _, slots = jax.lax.top_k(key, count)  # deepest first
+    valid = f.active[slots]
+    # top_k slot indices are unique, so a plain scatter-False is safe (slots
+    # that were already inactive just stay inactive).
+    return (
+        f._replace(active=f.active.at[slots].set(False)),
+        f.masks[slots],
+        f.sols[slots],
+        f.depths[slots],
+        valid,
+    )
+
+
+def pop_shallowest(f: Frontier):
+    """Pop the single shallowest task (the donation, Alg. 6).
+
+    Returns (frontier, mask, sol, depth, valid)."""
+    key = jnp.where(f.active, f.depths, BIG_DEPTH)
+    slot = jnp.argmin(key)
+    valid = f.active[slot]
+    return (
+        f._replace(active=f.active.at[slot].set(False)),
+        f.masks[slot],
+        f.sols[slot],
+        f.depths[slot],
+        valid,
+    )
+
+
+def push_many(f: Frontier, masks, sols, depths, valid):
+    """Push up to K tasks (valid flags mark real ones).
+
+    Free slots are assigned in order; pushes beyond capacity set ``overflow``
+    and are dropped (engine sizes capacity so this never happens)."""
+    K = valid.shape[0]
+    free = ~f.active  # (CAP,)
+    # rank of each free slot among free slots (0-based)
+    free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1
+    # for each incoming task i (0-based among valid), target free rank
+    task_rank = jnp.cumsum(valid.astype(jnp.int32)) - 1  # (K,)
+    n_free = free.sum()
+    placeable = valid & (task_rank < n_free)
+    overflow = f.overflow | (valid & ~placeable).any()
+    # slot index for each placeable task: the free slot with matching rank.
+    # Build map rank -> slot; non-free slots scatter out-of-range (dropped).
+    cap = f.capacity
+    slot_of_rank = jnp.zeros((cap,), jnp.int32)
+    slot_of_rank = slot_of_rank.at[jnp.where(free, free_rank, cap)].set(
+        jnp.arange(cap, dtype=jnp.int32), mode="drop"
+    )
+    # non-placeable tasks scatter out-of-range (dropped) — avoids duplicate
+    # in-range indices, which XLA scatters nondeterministically.
+    tgt = jnp.where(
+        placeable, slot_of_rank[jnp.clip(task_rank, 0, cap - 1)], cap
+    )  # (K,)
+
+    def place(arr, vals):
+        return arr.at[tgt].set(vals, mode="drop")
+
+    return f._replace(
+        masks=place(f.masks, masks),
+        sols=place(f.sols, sols),
+        depths=place(f.depths, depths.astype(jnp.int32)),
+        active=f.active.at[tgt].set(True, mode="drop"),
+        overflow=overflow,
+    )
+
+
+def push_one(f: Frontier, mask, sol, depth, valid):
+    return push_many(
+        f, mask[None], sol[None], depth[None].astype(jnp.int32), valid[None]
+    )

@@ -1,0 +1,366 @@
+"""SPMD superstep engine: the TPU adaptation of the semi-centralized strategy.
+
+One superstep =
+
+  1. **explore** — each worker expands up to ``lanes`` of its deepest tasks
+     for ``steps_per_round`` rounds (the paper's exploration threads);
+  2. **control plane** — each worker contributes THREE integers
+     (pending count, shallowest pending depth, local best value) to an
+     all-gather: this is the paper's "every message is a single integer"
+     budget, and the gathered (P, 3) table is the entire center state;
+  3. **replicated center** — every worker deterministically computes the same
+     idle→donor matching from the table (`getNextWorkingNode` over RUNNING
+     workers; priority = shallowest pending task, or round-robin "random");
+  4. **data plane** — matched donors pop their *shallowest* task (Alg. 6) and
+     the fixed-size record moves to the idle worker (reference path:
+     all-gather + select; see §Perf in EXPERIMENTS.md for the alternatives);
+  5. **best-value broadcast** — global best = min over workers (the paper's
+     ``bestval_update`` verify-then-broadcast collapses to one pmin).
+
+Failure-free guarantee (paper §3.1): the matcher only pairs an idle worker
+with a donor whose ``pending >= 2``, and in BSP the transfer completes inside
+the same superstep — a matched idle worker ALWAYS receives a task, no retries.
+
+Termination (paper §3.3): transfers cannot straddle a superstep boundary, so
+``psum(pending) == 0`` after the transfer phase is exact quiescence — the
+sent/ack counting and timeout safety mechanisms of the MPI implementation are
+subsumed by the BSP barrier.
+
+The same function runs under ``jax.vmap(axis_name=...)`` (P virtual workers
+on one device — used by tests) and ``jax.shard_map`` (one worker per mesh
+device — used by the launcher and the multi-pod dry-run).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.frontier import (
+    BIG_DEPTH,
+    Frontier,
+    make_frontier,
+    pop_deepest,
+    pop_shallowest,
+    push_many,
+    push_one,
+)
+from repro.problems.vertex_cover import (
+    VCProblem,
+    branch_once,
+    degrees,
+    lower_bound,
+    popcount,
+)
+
+
+class WorkerState(NamedTuple):
+    frontier: Frontier
+    best_val: jnp.ndarray  # () int32 -- global best seen (paper: global_bestval)
+    local_best_val: jnp.ndarray  # () int32 -- best found by THIS worker
+    best_sol: jnp.ndarray  # (W,) uint32 -- the cover achieving local_best_val
+    nodes_expanded: jnp.ndarray  # () int32
+    tasks_sent: jnp.ndarray  # () int32
+    tasks_recv: jnp.ndarray  # () int32
+    rounds: jnp.ndarray  # () int32
+
+
+def make_worker_state(capacity: int, W: int, initial_best: int) -> WorkerState:
+    z = jnp.int32(0)
+    return WorkerState(
+        frontier=make_frontier(capacity, W),
+        best_val=jnp.int32(initial_best),
+        local_best_val=jnp.int32(initial_best),
+        best_sol=jnp.zeros((W,), jnp.uint32),
+        nodes_expanded=z,
+        tasks_sent=z,
+        tasks_recv=z,
+        rounds=z,
+    )
+
+
+# -- phase 1: exploration ------------------------------------------------------
+
+
+def _explore_one_round(problem: VCProblem, state: WorkerState, lanes: int):
+    """Pop up to ``lanes`` deepest tasks, expand each, push children."""
+    f, masks, sols, depths, valid = pop_deepest(state.frontier, lanes)
+
+    sol_sizes = jax.vmap(popcount)(sols)  # (L,)
+    degs = jax.vmap(lambda m: degrees(problem, m))(masks)  # (L, n)
+    lbs = jax.vmap(lower_bound)(degs)  # (L,)
+    not_pruned = valid & (sol_sizes + lbs < state.best_val)
+
+    res = jax.vmap(lambda m, s: branch_once(problem, m, s))(masks, sols)
+
+    # terminal candidates -> best update (paper: handleSolution + bestval)
+    term = not_pruned & res.is_terminal & (res.terminal_size < state.best_val)
+    term_size = jnp.where(term, res.terminal_size, jnp.int32(1 << 30))
+    li = jnp.argmin(term_size)
+    found_size = term_size[li]  # 1<<30 when no lane found a terminal
+    # local best only improves with terminals THIS worker found (its stored
+    # solution must actually achieve local_best_val); the global view may also
+    # shrink via the pmin in the communication phase.
+    new_sol = jnp.where(
+        found_size < state.local_best_val, res.terminal_sol[li], state.best_sol
+    )
+    new_local = jnp.minimum(state.local_best_val, found_size)
+    new_best = jnp.minimum(state.best_val, found_size)
+
+    # children push: [left_0..left_L, right_0..right_L], pruned-at-birth if
+    # their partial solution already >= best (host reference does the same).
+    expandable = not_pruned & ~res.is_terminal
+    cdepth = depths + 1
+    lvalid = expandable & (jax.vmap(popcount)(res.left_sol) < new_best)
+    rvalid = expandable & (jax.vmap(popcount)(res.right_sol) < new_best)
+    all_masks = jnp.concatenate([res.left_mask, res.right_mask], axis=0)
+    all_sols = jnp.concatenate([res.left_sol, res.right_sol], axis=0)
+    all_depths = jnp.concatenate([cdepth, cdepth], axis=0)
+    all_valid = jnp.concatenate([lvalid, rvalid], axis=0)
+    f = push_many(f, all_masks, all_sols, all_depths, all_valid)
+
+    return state._replace(
+        frontier=f,
+        best_val=new_best,
+        local_best_val=new_local,
+        best_sol=new_sol,
+        nodes_expanded=state.nodes_expanded + valid.sum().astype(jnp.int32),
+    )
+
+
+def explore_phase(
+    problem: VCProblem, state: WorkerState, steps: int, lanes: int
+) -> WorkerState:
+    def body(_, s):
+        return _explore_one_round(problem, s, lanes)
+
+    return jax.lax.fori_loop(0, steps, body, state)
+
+
+# -- phase 3: the replicated center -------------------------------------------
+
+
+def match_idle_to_donors(
+    pending: jnp.ndarray,  # (P,) int32
+    top_depth: jnp.ndarray,  # (P,) int32 (BIG_DEPTH when empty)
+    policy_priority: bool,
+    round_idx: jnp.ndarray,  # () int32 -- salt for the round-robin policy
+):
+    """The center's `getNextWorkingNode`, replicated: every worker computes
+    the same matching from the same (P,) status vectors.
+
+    Returns (send_to, recv_from): per-worker partner index or -1.
+    Donors need pending >= 2 (donate one, keep one — failure-free).
+    'priority' ranks donors by shallowest pending depth (heaviest task,
+    paper §3.2 metadata policy); 'random' becomes a round-salted round-robin
+    (deterministic — required for SPMD replication — but unbiased over time).
+    """
+    P = pending.shape[0]
+    idx = jnp.arange(P, dtype=jnp.int32)
+    idle = pending == 0
+    donor = pending >= 2
+
+    # rank idle workers 0..n_idle-1 in index order
+    idle_rank = jnp.where(idle, jnp.cumsum(idle.astype(jnp.int32)) - 1, -1)
+
+    # order donors: priority -> by (top_depth, idx); round-robin -> by
+    # ((idx + salt) mod P, idx) which rotates who donates first each round.
+    if policy_priority:
+        donor_key = top_depth * P + idx
+    else:
+        donor_key = (idx + round_idx) % P
+    donor_key = jnp.where(donor, donor_key, jnp.int32(1 << 30))
+    donor_order = jnp.argsort(donor_key)  # donors first, in key order
+    donor_rank = jnp.zeros((P,), jnp.int32).at[donor_order].set(idx)
+    donor_rank = jnp.where(donor, donor_rank, -1)
+
+    # donor with rank k serves idle with rank k
+    n_idle = idle.sum()
+    n_donor = donor.sum()
+    n_match = jnp.minimum(n_idle, n_donor)
+
+    # send_to[w] = idle worker with rank donor_rank[w] (if matched)
+    idle_by_rank = jnp.zeros((P,), jnp.int32).at[
+        jnp.where(idle, idle_rank, P)
+    ].set(idx, mode="drop")
+    send_to = jnp.where(
+        donor & (donor_rank < n_match), idle_by_rank[jnp.clip(donor_rank, 0, P - 1)], -1
+    )
+    donor_by_rank = jnp.zeros((P,), jnp.int32).at[
+        jnp.where(donor, donor_rank, P)
+    ].set(idx, mode="drop")
+    recv_from = jnp.where(
+        idle & (idle_rank < n_match), donor_by_rank[jnp.clip(idle_rank, 0, P - 1)], -1
+    )
+    return send_to, recv_from
+
+
+# -- the full superstep ---------------------------------------------------------
+
+
+def superstep(
+    problem: VCProblem,
+    state: WorkerState,
+    *,
+    axis_name: str,
+    steps_per_round: int,
+    lanes: int,
+    policy_priority: bool = True,
+    transfer_pad_words: int = 0,
+    packed_status: bool = True,
+    skip_empty_transfer: bool = True,
+):
+    """One BSP round for a single worker (replicated via vmap/shard_map).
+
+    ``transfer_pad_words`` emulates the paper's *basic* encoding (§4.3): the
+    task record is padded by n·W words of (redundant) adjacency payload so the
+    collective moves the same bytes the MPI version would — used by the
+    encoding benchmark; 0 = optimized encoding.
+
+    §Perf knobs (EXPERIMENTS.md):
+      packed_status       — (pending, top_depth) bit-packed into ONE i32 per
+                            worker (+ a scalar pmin for the bound) instead of
+                            a 3-int row: the control-plane gather shrinks 3x.
+      skip_empty_transfer — the record all-gather runs under a cond that every
+                            worker evaluates identically from the replicated
+                            table; rounds with no match move ZERO payload.
+
+    Returns (state, done) where done is the exact global quiescence flag.
+    """
+    W = state.best_sol.shape[0]
+
+    # 1. explore
+    state = explore_phase(problem, state, steps_per_round, lanes)
+
+    # 2. control plane through the "center" + 5. best-value broadcast
+    pending = state.frontier.pending()
+    top_depth = state.frontier.top_priority_depth()
+    if packed_status:
+        # one i32 per worker: pending (15b) | clamped depth (16b)
+        word = (jnp.clip(pending, 0, 0x7FFF) << 16) | jnp.clip(
+            top_depth, 0, 0xFFFF
+        )
+        table_w = jax.lax.all_gather(word, axis_name)  # (P,)
+        pend_t = table_w >> 16
+        depth_t = table_w & 0xFFFF
+        global_best = jax.lax.pmin(
+            jnp.minimum(state.local_best_val, state.best_val), axis_name
+        )
+    else:
+        my_status = jnp.stack([pending, top_depth, state.local_best_val])
+        table = jax.lax.all_gather(my_status, axis_name)  # (P, 3)
+        pend_t, depth_t = table[:, 0], table[:, 1]
+        global_best = jnp.minimum(table[:, 2].min(), state.best_val)
+    state = state._replace(best_val=global_best)
+
+    # 3. replicated center matching
+    me = jax.lax.axis_index(axis_name).astype(jnp.int32)
+    send_to, recv_from = match_idle_to_donors(
+        pend_t, depth_t, policy_priority, state.rounds
+    )
+    n_match = (send_to >= 0).sum()
+
+    # 4. data plane: donor pops shallowest; record = (mask, sol, depth[, pad])
+    def do_transfer(state):
+        i_send = send_to[me] >= 0
+        f2, d_mask, d_sol, d_depth, d_valid = pop_shallowest(state.frontier)
+        do_send = i_send & d_valid  # guaranteed by pending>=2, but be safe
+        new_frontier = jax.tree.map(
+            lambda a, b: jnp.where(do_send, a, b), f2, state.frontier
+        )
+        record = jnp.concatenate(
+            [d_mask, d_sol, d_depth[None].astype(jnp.uint32)]
+        )
+        if transfer_pad_words:
+            record = jnp.concatenate(
+                [record, jnp.zeros((transfer_pad_words,), jnp.uint32)]
+            )
+        record = jnp.where(do_send, record, 0)
+
+        # reference path: all-gather the records, select my donor's row
+        all_records = jax.lax.all_gather(record, axis_name)  # (P, REC)
+        my_src = recv_from[me]
+        i_recv = my_src >= 0
+        got = all_records[jnp.clip(my_src, 0, all_records.shape[0] - 1)]
+        new_frontier = push_one(
+            new_frontier,
+            got[:W],
+            got[W : 2 * W],
+            got[2 * W].astype(jnp.int32),
+            i_recv,
+        )
+        return state._replace(
+            frontier=new_frontier,
+            tasks_sent=state.tasks_sent + do_send.astype(jnp.int32),
+            tasks_recv=state.tasks_recv + i_recv.astype(jnp.int32),
+        )
+
+    if skip_empty_transfer:
+        # n_match derives from the replicated table: every worker takes the
+        # same branch, so the collective inside the cond is safe.
+        state = jax.lax.cond(n_match > 0, do_transfer, lambda s: s, state)
+    else:
+        state = do_transfer(state)
+    state = state._replace(rounds=state.rounds + 1)
+
+    # exact termination: nothing pending anywhere after the transfer phase
+    total_pending = jax.lax.psum(state.frontier.pending(), axis_name)
+    done = total_pending == 0
+    return state, done
+
+
+def build_superstep_fn(
+    problem: VCProblem,
+    *,
+    num_workers: int,
+    steps_per_round: int,
+    lanes: int,
+    policy_priority: bool = True,
+    transfer_pad_words: int = 0,
+    packed_status: bool = True,
+    skip_empty_transfer: bool = True,
+    mesh=None,
+    axis_name: str = "workers",
+):
+    """Return a jitted ``state -> (state, done)`` over stacked (P, ...) state.
+
+    mesh=None  -> vmap over the leading axis (P virtual workers, one device).
+    mesh given -> shard_map over the mesh axis ``axis_name`` (one worker per
+                  device; state leading axis must equal mesh size).
+    """
+    step = functools.partial(
+        superstep,
+        problem,
+        axis_name=axis_name,
+        steps_per_round=steps_per_round,
+        lanes=lanes,
+        policy_priority=policy_priority,
+        transfer_pad_words=transfer_pad_words,
+        packed_status=packed_status,
+        skip_empty_transfer=skip_empty_transfer,
+    )
+    if mesh is None:
+        vstep = jax.vmap(step, axis_name=axis_name)
+
+        def run(state):
+            state, done = vstep(state)
+            return state, done.all()
+
+        return jax.jit(run)
+
+    from jax.sharding import PartitionSpec as P
+
+    spec = P(axis_name)
+
+    def body(state_block):
+        # each shard sees a (1, ...) block: strip, step, restore
+        state = jax.tree.map(lambda x: x[0], state_block)
+        state, done = step(state)
+        return jax.tree.map(lambda x: x[None], state), done
+
+    return jax.jit(
+        jax.shard_map(body, mesh=mesh, in_specs=(spec,), out_specs=(spec, P()))
+    )

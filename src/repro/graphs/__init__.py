@@ -1,0 +1,34 @@
+"""Bitset graph substrate (paper §4.1: adjacency-matrix bitsets).
+
+Graphs are stored as packed ``uint32`` adjacency bitsets of shape ``(n, W)``
+with ``W = ceil(n/32)``: bit ``v`` of row ``u`` is set iff ``uv`` is an edge.
+This is the representation the paper uses for fast union/intersection in the
+reduction rules, and it is also what makes the TPU port natural: every task is
+a fixed-shape ``uint32[W]`` vertex mask (the paper's *optimized encoding*).
+"""
+
+from repro.graphs.bitgraph import (
+    BitGraph,
+    pack_masks,
+    unpack_mask,
+    popcount_rows,
+    mask_full,
+)
+from repro.graphs.generators import (
+    erdos_renyi,
+    p_hat_like,
+    parse_dimacs,
+    to_dimacs,
+)
+
+__all__ = [
+    "BitGraph",
+    "pack_masks",
+    "unpack_mask",
+    "popcount_rows",
+    "mask_full",
+    "erdos_renyi",
+    "p_hat_like",
+    "parse_dimacs",
+    "to_dimacs",
+]

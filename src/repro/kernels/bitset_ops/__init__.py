@@ -1,0 +1,9 @@
+from repro.kernels.bitset_ops.ops import degrees_op, max_degree_vertex
+from repro.kernels.bitset_ops.ref import batched_degrees_ref, max_degree_vertex_ref
+
+__all__ = [
+    "degrees_op",
+    "max_degree_vertex",
+    "batched_degrees_ref",
+    "max_degree_vertex_ref",
+]

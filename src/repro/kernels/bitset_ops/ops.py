@@ -1,0 +1,35 @@
+"""Jit'd public wrapper for the bitset-degree kernel.
+
+``degrees_op`` dispatches to the Pallas kernel (interpret-mode on CPU, native
+on TPU) and falls back to the jnp oracle for shapes the kernel does not tile
+well (tiny T).  ``max_degree_vertex`` composes the branching-vertex argmax.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitset_ops.kernel import batched_degrees
+from repro.kernels.bitset_ops.ref import batched_degrees_ref
+
+
+def degrees_op(
+    adj: jnp.ndarray,
+    masks: jnp.ndarray,
+    *,
+    use_kernel: bool = True,
+    block_tasks: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(n, W) adj × (T, W) masks -> (T, n) induced-subgraph degrees."""
+    if not use_kernel or masks.shape[0] < 2:
+        return batched_degrees_ref(adj, masks)
+    return batched_degrees(
+        adj, masks, block_tasks=block_tasks, interpret=interpret
+    )
+
+
+def max_degree_vertex(adj, masks, **kw):
+    deg = degrees_op(adj, masks, **kw)
+    return jnp.argmax(deg, axis=1).astype(jnp.int32), deg.max(axis=1)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the batched bitset-degree kernel.
+
+For a batch of tasks (packed vertex masks), compute every vertex's induced-
+subgraph degree and the maximum-degree vertex — the inner loop of the paper's
+vertex-cover branching (Alg. 8 line 7: "find a vertex u of maximum degree").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD_BITS = 32
+
+
+def batched_degrees_ref(adj: jnp.ndarray, masks: jnp.ndarray) -> jnp.ndarray:
+    """adj (n, W) uint32, masks (T, W) uint32 -> degrees (T, n) int32.
+
+    deg[t, v] = popcount(adj[v] & masks[t]) if v in masks[t] else -1.
+    """
+    n, W = adj.shape
+    inter = adj[None, :, :] & masks[:, None, :]  # (T, n, W)
+    deg = jax.lax.population_count(inter).astype(jnp.int32).sum(axis=-1)
+    v = jnp.arange(n)
+    word_idx, bit_idx = v // WORD_BITS, (v % WORD_BITS).astype(jnp.uint32)
+    inside = ((masks[:, word_idx] >> bit_idx[None, :]) & 1).astype(bool)  # (T, n)
+    return jnp.where(inside, deg, jnp.int32(-1))
+
+
+def max_degree_vertex_ref(adj: jnp.ndarray, masks: jnp.ndarray):
+    """-> (u (T,) int32, maxdeg (T,) int32): the branching vertex per task."""
+    deg = batched_degrees_ref(adj, masks)
+    return jnp.argmax(deg, axis=1).astype(jnp.int32), deg.max(axis=1)

@@ -1,0 +1,10 @@
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ops import attention_op, blockwise_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = [
+    "flash_attention",
+    "attention_op",
+    "blockwise_attention",
+    "attention_ref",
+]

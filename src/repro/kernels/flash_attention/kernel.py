@@ -1,0 +1,150 @@
+"""Pallas TPU flash attention (blockwise online softmax).
+
+Standard TPU decomposition: grid over (batch·q-heads, q blocks); the kernel
+loops over KV blocks with a fori_loop, maintaining the running max ``m``,
+normalizer ``l`` and accumulator in registers/VMEM — no (S, S) score matrix
+ever exists.  Block shapes are (Bq, D) × (Bk, D) with D padded to a lane
+multiple by the caller; Bq/Bk default to 128/128 (MXU-aligned) and shrink to
+the sequence when shorter.
+
+Causal and sliding-window masks are applied per KV block; whole blocks that
+are fully masked are skipped via the loop bounds (the causal upper bound),
+which is what makes the kernel O(S·w) for local attention.
+
+GQA: the caller maps q heads to kv heads in the grid index map, so KV blocks
+are fetched once per *kv* head regardless of the group size.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, Bq, D)
+    k_ref,  # (1, Sk, D)  -- whole K panel for this (b, kv-head)
+    v_ref,  # (1, Sk, D)
+    o_ref,  # (1, Bq, D)
+    *,
+    causal: bool,
+    window: int | None,
+    scale: float,
+    block_k: int,
+    q_offset: int,  # Sk - Sq (decode: queries sit at the end of the timeline)
+    seq_k: int,  # TRUE KV length (panels are padded to a block_k multiple)
+):
+    _, Bq, D = q_ref.shape
+    Sk = seq_k
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale
+    qpos = qi * Bq + jax.lax.broadcasted_iota(jnp.int32, (Bq, 1), 0) + q_offset
+
+    nblocks = pl.cdiv(Sk, block_k)
+    if causal:
+        # last KV block that any query in this q-block can see
+        hi = jnp.minimum(
+            (qi * Bq + Bq - 1 + q_offset) // block_k + 1, nblocks
+        )
+    else:
+        hi = nblocks
+    if window is not None:
+        lo = jnp.maximum((qi * Bq + q_offset - window + 1) // block_k, 0)
+    else:
+        lo = 0
+
+    def kv_step(j, carry):
+        acc, m, l = carry
+        k = k_ref[0, pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k.T  # (Bq, Bk)
+        kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        mask = kpos < Sk  # tail padding
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + p.sum(axis=1, keepdims=True)
+        acc_new = acc * alpha + p @ v
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((Bq, D), jnp.float32)
+    m0 = jnp.full((Bq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((Bq, 1), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(lo, hi, kv_step, (acc0, m0, l0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, Hq, D)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D)
+    v: jnp.ndarray,  # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, "query heads must be a multiple of kv heads"
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+    Bq = min(block_q, Sq)
+    Bk = min(block_k, Sk)
+
+    # layout: fold (batch, head) into the grid; (BH, S, D) panels.
+    # K/V are padded to a Bk multiple because the kernel slices them with
+    # pl.ds, whose out-of-bounds reads clamp the start index (wrong rows);
+    # the kpos < Sk mask neutralizes the padded tail.
+    pad_k = (-Sk) % Bk
+    qt = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, pad_k), (0, 0)))
+    Sk_pad = Sk + pad_k
+
+    grid = (B * Hq, pl.cdiv(Sq, Bq))
+
+    def kv_index(h, i):
+        b, hq = h // Hq, h % Hq
+        return (b * Hkv + hq // G, 0, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            causal=causal,
+            window=window,
+            scale=scale,
+            block_k=Bk,
+            q_offset=Sk - Sq,
+            seq_k=Sk,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Bq, D), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, Sk_pad, D), kv_index),
+            pl.BlockSpec((1, Sk_pad, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, Bq, D), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,100 @@
+"""Jit'd public wrapper: picks the flash kernel or the jnp blockwise path.
+
+Three tiers, all with identical semantics (tests sweep all of them):
+
+* ``attention_ref``      — (S, S) materialized; test sizes only.
+* ``blockwise_attention``— jnp online-softmax lax.scan over KV blocks; the
+  XLA-compiled path used by models for dry-run/roofline (no S² buffer, which
+  keeps the compiled memory term honest — this IS flash, expressed in jnp).
+* ``flash_attention``    — the Pallas kernel (interpret on CPU, native TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+NEG_INF = -1e30
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "scale", "block_k")
+)
+def blockwise_attention(
+    q: jnp.ndarray,  # (B, Sq, Hq, D)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D)
+    v: jnp.ndarray,  # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_k: int = 512,
+) -> jnp.ndarray:
+    """Online-softmax attention as a lax.scan over KV blocks (pure jnp)."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+    Bk = min(block_k, Sk)
+    nblk = -(-Sk // Bk)
+    pad = nblk * Bk - Sk
+
+    # (B, Hkv, G, Sq, D) query layout so GQA needs no KV repeat
+    qh = q.transpose(0, 2, 1, 3).reshape(B, Hkv, G, Sq, D) * scale
+    kh = k.transpose(0, 2, 1, 3)  # (B, Hkv, Sk, D)
+    vh = v.transpose(0, 2, 1, 3)
+    if pad:
+        kh = jnp.pad(kh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = kh.reshape(B, Hkv, nblk, Bk, D).transpose(2, 0, 1, 3, 4)
+    vb = vh.reshape(B, Hkv, nblk, Bk, D).transpose(2, 0, 1, 3, 4)
+
+    qpos = jnp.arange(Sq) + (Sk - Sq)
+
+    def step(carry, blk):
+        acc, m, l = carry
+        kj, vj, j = blk
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qh, kj)  # (B,Hkv,G,Sq,Bk)
+        kpos = j * Bk + jnp.arange(Bk)
+        mask = kpos[None, :] < Sk
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if window is not None:
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + p.sum(-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p, vj)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    m0 = jnp.full((B, Hkv, G, Sq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq, 1), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0), (kb, vb, jnp.arange(nblk))
+    )
+    out = acc / jnp.maximum(l, 1e-30)
+    out = out.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)
+
+
+def attention_op(
+    q, k, v, *, causal=True, window=None, scale=None, impl: str = "blockwise", **kw
+):
+    """Dispatch: impl in {'ref', 'blockwise', 'pallas'}."""
+    if impl == "ref":
+        return attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+    if impl == "pallas":
+        return flash_attention(
+            q, k, v, causal=causal, window=window, scale=scale, **kw
+        )
+    return blockwise_attention(
+        q, k, v, causal=causal, window=window, scale=scale, **kw
+    )

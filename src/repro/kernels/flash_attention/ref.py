@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for blockwise (flash) attention.
+
+Supports causal masking, sliding-window (local) masking, and GQA (the kernel
+folds query-head groups; the oracle broadcasts KV heads).  This is the exact
+math the Pallas kernel must reproduce, evaluated with a materialized (S, S)
+score matrix — only usable at test sizes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, Sq, Hq, D)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D)
+    v: jnp.ndarray,  # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,  # sliding window size (None = global)
+    scale: float | None = None,
+) -> jnp.ndarray:
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+
+    kr = jnp.repeat(k, G, axis=2)  # (B, Sk, Hq, D)
+    vr = jnp.repeat(v, G, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kr) * scale  # (B, Hq, Sq, Sk)
+
+    # positions: queries occupy the LAST Sq slots of the Sk timeline (decode:
+    # Sq=1 attends to the full cache causally).
+    qpos = jnp.arange(Sq) + (Sk - Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+
+    probs = jnp.nan_to_num(jnp.exp(logits - logits.max(-1, keepdims=True)))
+    probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vr)
+    return out.astype(q.dtype)

@@ -1,0 +1,48 @@
+"""Jit'd public wrapper for the WKV6 recurrence.
+
+``wkv6_op`` pads T to a chunk multiple, dispatches kernel vs oracle, and
+exposes the single-step form used by the decode path (``wkv6_decode_step``:
+one token against a carried (K, V) state — O(1) in sequence length, which is
+what makes rwkv6's ``long_500k`` shape tractable).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.kernel import wkv6
+from repro.kernels.wkv6.ref import wkv6_ref
+
+
+def wkv6_op(
+    r, k, v, decay, u, initial_state=None, *, impl: str = "ref", chunk: int = 32
+):
+    """(B, T, H, K/V) inputs -> (out, final_state).  impl: 'ref' | 'pallas'."""
+    if impl == "pallas":
+        T = r.shape[1]
+        pad = (-T) % chunk
+        if pad:
+            zK = jnp.zeros((r.shape[0], pad, r.shape[2], r.shape[3]), r.dtype)
+            zV = jnp.zeros((v.shape[0], pad, v.shape[2], v.shape[3]), v.dtype)
+            one = jnp.ones_like(zK)
+            out, state = wkv6(
+                jnp.concatenate([r, zK], 1),
+                jnp.concatenate([k, zK], 1),
+                jnp.concatenate([v, zV], 1),
+                jnp.concatenate([decay, one], 1),
+                u,
+                initial_state,
+                chunk=chunk,
+            )
+            return out[:, :T], state
+        return wkv6(r, k, v, decay, u, initial_state, chunk=chunk)
+    return wkv6_ref(r, k, v, decay, u, initial_state)
+
+
+def wkv6_decode_step(r_t, k_t, v_t, d_t, u, state):
+    """One decode token: r_t/k_t/d_t (B, H, K), v_t (B, H, V),
+    state (B, H, K, V) -> (o_t (B, H, V), new_state)."""
+    kv = k_t[..., :, None] * v_t[..., None, :]
+    o = jnp.einsum("bhk,bhkv->bhv", r_t, state + u[None, :, :, None] * kv)
+    new_state = d_t[..., :, None] * state + kv
+    return o, new_state

@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) WKV recurrence.
+
+Per head with key dim K and value dim V, state S ∈ R^{K×V}:
+
+    o_t = r_t · (S_{t-1} + (u ⊙ k_t) ⊗ v_t)          (the u-bonus "current
+    S_t = diag(d_t) S_{t-1} + k_t ⊗ v_t               token counts extra")
+
+with d_t ∈ (0, 1]^K the *data-dependent* per-channel decay (RWKV6's novelty
+over RWKV5: d_t = exp(-exp(w_t)) is a function of the token).  The oracle is
+a lax.scan over time — O(T) sequential, exact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(
+    r: jnp.ndarray,  # (B, T, H, K) receptance ("query")
+    k: jnp.ndarray,  # (B, T, H, K)
+    v: jnp.ndarray,  # (B, T, H, V)
+    decay: jnp.ndarray,  # (B, T, H, K) in (0, 1] -- d_t
+    u: jnp.ndarray,  # (H, K) current-token bonus
+    initial_state: jnp.ndarray | None = None,  # (B, H, K, V)
+):
+    """Returns (out (B, T, H, V), final_state (B, H, K, V))."""
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    S0 = (
+        initial_state
+        if initial_state is not None
+        else jnp.zeros((B, H, K, V), jnp.float32)
+    )
+
+    def step(S, inp):
+        r_t, k_t, v_t, d_t = inp  # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,K,V)
+        o = jnp.einsum(
+            "bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv
+        )
+        S_new = d_t[..., :, None] * S + kv
+        return S_new, o
+
+    xs = (
+        r.transpose(1, 0, 2, 3).astype(jnp.float32),
+        k.transpose(1, 0, 2, 3).astype(jnp.float32),
+        v.transpose(1, 0, 2, 3).astype(jnp.float32),
+        decay.transpose(1, 0, 2, 3).astype(jnp.float32),
+    )
+    S, outs = jax.lax.scan(step, S0, xs)
+    return outs.transpose(1, 0, 2, 3).astype(r.dtype), S

@@ -1,0 +1,92 @@
+"""Serving driver: batched greedy decode with the semi-centralized balancer.
+
+Runs a smoke-scale model end to end: prefill the prompt batch, then decode
+tokens with the KV-cache ``decode_fn``, while the request balancer keeps the
+replica batches full (simulated replicas on CPU; on a pod each replica is a
+data-parallel model copy and the balancer state table is the all-gathered
+O(R)-integer vector — see serving/balancer.py).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+      --batch 4 --prompt-len 16 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config, get_smoke_config
+from repro.models.registry import get_model
+from repro.serving.balancer import simulate
+
+
+def greedy_decode(cfg, model, params, prompts, gen: int):
+    """prompts (B, P) -> generated (B, gen) using the decode cache path."""
+    B, P = prompts.shape
+    cache, _ = model.init_decode_cache(B, P + gen + 1)
+    if cfg.family == "encdec":
+        from repro.models import encdec
+
+        frames = jnp.zeros((B, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        cache = encdec.prime_cross_cache(params, cfg, cache, frames)
+
+    decode = jax.jit(model.decode_fn)
+    # prefill token-by-token through the decode path (smoke-scale; a real
+    # deployment prefills with the chunked forward then transplants the cache)
+    tok = prompts[:, :1]
+    for t in range(P):
+        logits, cache = decode(params, cache, prompts[:, t : t + 1])
+    out = []
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    for _ in range(gen):
+        out.append(tok)
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--replicas", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.key(args.seed))
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32
+    )
+    t0 = time.perf_counter()
+    toks = greedy_decode(cfg, model, params, prompts, args.gen)
+    dt = time.perf_counter() - t0
+    print(f"[serve] generated {toks.shape} in {dt:.1f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print("[serve] sample:", np.asarray(toks[0, :16]))
+
+    # balancer demonstration: hot-shard arrival pattern, with/without
+    works = list(rng.integers(8, 256, 64))
+    on = simulate(args.replicas, 8, works, balance=True, seed=args.seed)
+    off = simulate(args.replicas, 8, works, balance=False, seed=args.seed)
+    print(
+        f"[balancer] makespan {off['rounds']} -> {on['rounds']} rounds "
+        f"({off['rounds']/on['rounds']:.1f}x), idle-slot-steps "
+        f"{off['idle_slot_steps']} -> {on['idle_slot_steps']}, "
+        f"{on['transfers']} transfers, "
+        f"{on['control_ints_per_round']} control ints/round"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,268 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs`` feeds
+precomputed frame embeddings (B, enc_seq, d_model) directly to the encoder
+(bidirectional attention + sinusoidal positions).  The decoder is a standard
+causal stack with cross-attention into the encoder output; decode carries a
+self-attention KV cache plus the (precomputed once) cross-attention K/V.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.sharding import constrain, gather_params, spec_tree_of
+
+
+def _sinusoid(S, d):
+    pos = jnp.arange(S)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / (10_000 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _xattn_init(key, cfg: ModelConfig):
+    """Cross-attention: q from decoder, kv from encoder stream."""
+    return L.attention_init(key, cfg)
+
+
+def _enc_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = L.rmsnorm_init(cfg.d_model)
+    p["attn"], s["attn"] = L.attention_init(k1, cfg)
+    p["ln2"], s["ln2"] = L.rmsnorm_init(cfg.d_model)
+    p["mlp"], s["mlp"] = L.gelu_mlp_init(k2, cfg)
+    return p, s
+
+
+def _dec_block_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = L.rmsnorm_init(cfg.d_model)
+    p["attn"], s["attn"] = L.attention_init(k1, cfg)
+    p["lnx"], s["lnx"] = L.rmsnorm_init(cfg.d_model)
+    p["xattn"], s["xattn"] = _xattn_init(k2, cfg)
+    p["ln2"], s["ln2"] = L.rmsnorm_init(cfg.d_model)
+    p["mlp"], s["mlp"] = L.gelu_mlp_init(k3, cfg)
+    return p, s
+
+
+def init_lm(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    k_emb, k_enc, k_dec, k_out = jax.random.split(key, 4)
+    ekeys = jax.random.split(k_enc, cfg.n_enc_layers)
+    dkeys = jax.random.split(k_dec, cfg.n_layers)
+    enc_p = jax.vmap(lambda k: _enc_block_init(k, cfg)[0])(ekeys)
+    _, enc_s = _enc_block_init(ekeys[0], cfg)
+    dec_p = jax.vmap(lambda k: _dec_block_init(k, cfg)[0])(dkeys)
+    _, dec_s = _dec_block_init(dkeys[0], cfg)
+    stack = lambda s: jax.tree.map(
+        lambda ax: ("layers",) + ax, s, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    params = {
+        "embed": (
+            jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), jnp.float32)
+            * cfg.d_model**-0.5
+        ).astype(dt),
+        "enc_blocks": enc_p,
+        "enc_ln": L.rmsnorm_init(cfg.d_model)[0],
+        "dec_blocks": dec_p,
+        "ln_f": L.rmsnorm_init(cfg.d_model)[0],
+        "unembed": (
+            jax.random.normal(k_out, (cfg.d_model, cfg.vocab), jnp.float32)
+            * cfg.d_model**-0.5
+        ).astype(dt),
+    }
+    specs = {
+        "embed": ("vocab", "embed"),
+        "enc_blocks": stack(enc_s),
+        "enc_ln": ("embed",),
+        "dec_blocks": stack(dec_s),
+        "ln_f": ("embed",),
+        "unembed": ("embed", "vocab"),
+    }
+    return params, specs
+
+
+def encode(params, cfg: ModelConfig, frames, *, rules=None):
+    """frames (B, enc_seq, d) -> encoder output (B, enc_seq, d)."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)
+    x = constrain(x, ("batch", "seq", None), rules)
+    positions = jnp.arange(x.shape[1])
+
+    def blk(bp, x):
+        bp = gather_params(bp, _blk_specs(cfg, "enc"), rules)
+        h, _ = L.attention_apply(
+            cfg, bp["attn"], L.rmsnorm(x, bp["ln1"], cfg.norm_eps),
+            positions, causal=False,
+        )
+        x = constrain(x + h, ("batch", "seq", None), rules)
+        m = L.gelu_mlp_apply(bp["mlp"], L.rmsnorm(x, bp["ln2"], cfg.norm_eps))
+        return constrain(x + m, ("batch", "seq", None), rules)
+
+    blk = jax.checkpoint(
+        blk, policy=L.remat_policy(),
+        prevent_cse=False,
+    )
+    x, _ = jax.lax.scan(
+        lambda x, bp: (blk(bp, x), None), x, params["enc_blocks"],
+        unroll=L.scan_unroll(),
+    )
+    return L.rmsnorm(x, params["enc_ln"], cfg.norm_eps)
+
+
+def _cross_attend(cfg, xp, y, enc_kv):
+    """y (B, S, d) queries against precomputed encoder K/V."""
+    B, S, d = y.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = (y @ xp["wq"]).reshape(B, S, H, Dh)
+    k, v = enc_kv  # (B, Se, KV, Dh)
+    G = H // KV
+    qh = q.transpose(0, 2, 1, 3).reshape(B, KV, G, S, Dh) * (Dh**-0.5)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qh, kh.astype(qh.dtype))
+    p = jax.nn.softmax(s.astype(jnp.float32), -1).astype(qh.dtype)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vh.astype(qh.dtype))
+    o = o.reshape(B, H, S, Dh).transpose(0, 2, 1, 3).reshape(B, S, H * Dh)
+    return o @ xp["wo"]
+
+
+def _enc_kv(cfg, xp, enc_out):
+    B, Se, d = enc_out.shape
+    KV, Dh = cfg.n_kv_heads, cfg.d_head
+    k = (enc_out @ xp["wk"]).reshape(B, Se, KV, Dh)
+    v = (enc_out @ xp["wv"]).reshape(B, Se, KV, Dh)
+    return k, v
+
+
+_SPEC_CACHE: dict = {}
+
+
+def _blk_specs(cfg, which):
+    key = (cfg.name, which)
+    if key not in _SPEC_CACHE:
+        init = _enc_block_init if which == "enc" else _dec_block_init
+        _SPEC_CACHE[key] = spec_tree_of(lambda: init(jax.random.key(0), cfg))
+    return _SPEC_CACHE[key]
+
+
+def _dec_block(cfg, bp, x, positions, enc_out, rules, cache=None):
+    bp = gather_params(bp, _blk_specs(cfg, "dec"), rules)  # JIT-FSDP regather
+    h, new_kv = L.attention_apply(
+        cfg, bp["attn"], L.rmsnorm(x, bp["ln1"], cfg.norm_eps),
+        positions, causal=True,
+        cache=None if cache is None else (cache["k"], cache["v"], cache["len"]),
+    )
+    x = constrain(x + h, ("batch", "seq", None), rules)
+    if cache is not None and "xk" in cache:
+        xkv = (cache["xk"], cache["xv"])
+    else:
+        xkv = _enc_kv(cfg, bp["xattn"], enc_out)
+    cx = _cross_attend(cfg, bp["xattn"], L.rmsnorm(x, bp["lnx"], cfg.norm_eps), xkv)
+    x = constrain(x + cx, ("batch", "seq", None), rules)
+    m = L.gelu_mlp_apply(bp["mlp"], L.rmsnorm(x, bp["ln2"], cfg.norm_eps))
+    x = constrain(x + m, ("batch", "seq", None), rules)
+    return x, new_kv, xkv
+
+
+def forward(params, cfg: ModelConfig, tokens, *, frames=None, rules=None, **_):
+    """Teacher-forced decoder over encoded frames.  tokens (B, S)."""
+    assert frames is not None, "encdec forward needs frames"
+    enc_out = encode(params, cfg, frames, rules=rules)
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, ("batch", "seq", None), rules)
+    positions = jnp.arange(x.shape[1])
+
+    def blk(bp, x):
+        out, _, _ = _dec_block(cfg, bp, x, positions, enc_out, rules)
+        return out
+
+    blk = jax.checkpoint(
+        blk, policy=L.remat_policy(),
+        prevent_cse=False,
+    )
+    x, _ = jax.lax.scan(
+        lambda x, bp: (blk(bp, x), None), x, params["dec_blocks"],
+        unroll=L.scan_unroll(),
+    )
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ params["unembed"]
+    return constrain(logits, ("batch", "seq", "vocab"), rules), jnp.float32(0)
+
+
+def loss_fn(params, cfg, batch, *, rules=None, **kw):
+    logits, _ = forward(
+        params, cfg, batch["tokens"], frames=batch["frames"], rules=rules, **kw
+    )
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), batch["labels"][..., None], axis=-1
+    )[..., 0]
+    return (lse - gold).mean()
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Self-attn KV cache + slots for the precomputed cross K/V."""
+    KV, Dh, Ld = cfg.n_kv_heads, cfg.d_head, cfg.n_layers
+    dt = jnp.dtype(cfg.dtype)
+    kv_spec = ("layers", "batch", "seq_kv", "kv", None)
+    return {
+        "k": jnp.zeros((Ld, batch, max_len, KV, Dh), dt),
+        "v": jnp.zeros((Ld, batch, max_len, KV, Dh), dt),
+        "xk": jnp.zeros((Ld, batch, cfg.enc_seq, KV, Dh), dt),
+        "xv": jnp.zeros((Ld, batch, cfg.enc_seq, KV, Dh), dt),
+        "primed": jnp.bool_(False),
+        "len": jnp.int32(0),
+    }, {
+        "k": kv_spec,
+        "v": kv_spec,
+        "xk": kv_spec,
+        "xv": kv_spec,
+        "primed": (),
+        "len": (),
+    }
+
+
+def prime_cross_cache(params, cfg, cache, frames, *, rules=None):
+    """Run the encoder once and precompute every layer's cross K/V."""
+    enc_out = encode(params, cfg, frames, rules=rules)
+
+    def per_layer(bp):
+        k, v = _enc_kv(cfg, bp["xattn"], enc_out)
+        return k, v
+
+    xk, xv = jax.vmap(per_layer)(params["dec_blocks"])
+    return {**cache, "xk": xk, "xv": xv, "primed": jnp.bool_(True)}
+
+
+def decode_fn(params, cfg: ModelConfig, cache, tokens, *, rules=None):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    pos = cache["len"]
+    positions = jnp.full((1,), pos, jnp.int32)
+
+    def scan_body(x, inp):
+        bp, k_l, v_l, xk_l, xv_l = inp
+        lcache = {"k": k_l, "v": v_l, "xk": xk_l, "xv": xv_l, "len": pos}
+        x, new_kv, _ = _dec_block(
+            cfg, bp, x, positions, None, rules, cache=lcache
+        )
+        return x, (new_kv[0], new_kv[1])
+
+    x, (nk, nv) = jax.lax.scan(
+        scan_body,
+        x,
+        (params["dec_blocks"], cache["k"], cache["v"], cache["xk"], cache["xv"]),
+        unroll=L.scan_unroll(),
+    )
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ params["unembed"]
+    return logits, {**cache, "k": nk, "v": nv, "len": cache["len"] + 1}

@@ -1,0 +1,406 @@
+"""Griffin-style hybrid (recurrentgemma): RG-LRU recurrent blocks + local
+attention, tiled in the config's ``pattern`` (recurrentgemma: rec,rec,attn).
+
+The temporal stack is scanned per *group* (one pattern unit = one scan step;
+remainder layers run unscanned), so heterogeneous layer kinds keep the
+constant-size-HLO property.  The RG-LRU is a diagonal data-dependent linear
+recurrence — ``jax.lax.associative_scan`` over (a_t, b_t) pairs, O(log T)
+depth, no custom kernel needed (DESIGN.md §6); decode carries (B, d_rnn)
+hidden + (B, conv_width-1, d_rnn) conv state + a window-sized KV cache for
+the attention layers (O(window), which is why long_500k lowers).
+
+RG-LRU (arXiv:2402.19427 eq. 3-4):
+    r_t = σ(W_a x_t + b_a);  i_t = σ(W_x x_t + b_x)
+    a_t = exp(c · r_t · (−softplus(Λ)))          (c = 8)
+    h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.sharding import constrain, gather_params, spec_tree_of
+
+LRU_C = 8.0
+
+
+# -- RG-LRU recurrent block -----------------------------------------------------
+
+
+def _rec_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dr = cfg.d_rnn or d
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["w_gate"], s["w_gate"] = L.dense_init(ks[0], d, dr, "embed", "rnn", dt)
+    p["w_in"], s["w_in"] = L.dense_init(ks[1], d, dr, "embed", "rnn", dt)
+    p["conv"], s["conv"] = (
+        jax.random.normal(ks[2], (cfg.conv_width, dr), jnp.float32) * 0.1
+    ).astype(dt), ("conv", "rnn")
+    p["w_a"], s["w_a"] = L.dense_init(ks[3], dr, dr, None, "rnn", dt)
+    p["b_a"], s["b_a"] = jnp.zeros((dr,), jnp.float32), ("rnn",)
+    p["w_x"], s["w_x"] = L.dense_init(ks[4], dr, dr, None, "rnn", dt)
+    p["b_x"], s["b_x"] = jnp.zeros((dr,), jnp.float32), ("rnn",)
+    # Λ init so that a ≈ uniform(0.9, 0.999) at r = 1 (paper appendix)
+    lam = jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, dr)) / LRU_C))
+    p["lam"], s["lam"] = lam.astype(jnp.float32), ("rnn",)
+    p["w_out"], s["w_out"] = L.dense_init(ks[5], dr, d, "rnn", "embed", dt)
+    return p, s
+
+
+def _causal_conv(x, w, state: Optional[jnp.ndarray]):
+    """Depthwise causal conv over time.  x (B,T,dr), w (CW,dr);
+    state (B, CW-1, dr) carries the tail for decode."""
+    CW = w.shape[0]
+    prev = (
+        jnp.zeros((x.shape[0], CW - 1, x.shape[2]), x.dtype)
+        if state is None
+        else state.astype(x.dtype)
+    )
+    xp = jnp.concatenate([prev, x], axis=1)  # (B, T+CW-1, dr)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(CW))
+    return out, xp[:, -(CW - 1) :]
+
+
+def _rglru(x, r, i, lam, h0: Optional[jnp.ndarray]):
+    """x,r,i (B,T,dr); h0 (B,dr) or None.  Returns (y, h_T)."""
+    log_a = -LRU_C * jax.nn.softplus(lam) * r.astype(jnp.float32)  # ≤ 0
+    a = jnp.exp(log_a)
+    gated = (i * x).astype(jnp.float32)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0)) * gated
+    if x.shape[1] == 1 and h0 is not None:  # decode fast path
+        h = a[:, 0] * h0 + b[:, 0]
+        return h[:, None].astype(x.dtype), h
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rec_apply(cfg, p, x, *, state=None, rules=None):
+    """Recurrent temporal block.  state = dict(h, conv) or None."""
+    st = state or {}
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    u = x @ p["w_in"]
+    u, conv_state = _causal_conv(u, p["conv"], st.get("conv"))
+    r = jax.nn.sigmoid(u @ p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(u @ p["w_x"] + p["b_x"])
+    y, h = _rglru(u, r, i, p["lam"], st.get("h"))
+    out = (y * gate) @ p["w_out"]
+    return out, {"h": h, "conv": conv_state}
+
+
+# -- block stack -------------------------------------------------------------------
+
+
+def _group_init(key, cfg: ModelConfig):
+    """One pattern unit (e.g. rec, rec, attn), each with its own norms+mlp."""
+    p, s = {"sub": []}, {"sub": []}
+    ks = jax.random.split(key, len(cfg.pattern))
+    for kind, k in zip(cfg.pattern, ks):
+        k1, k2 = jax.random.split(k)
+        sp, ss = {}, {}
+        sp["ln1"], ss["ln1"] = L.rmsnorm_init(cfg.d_model)
+        if kind == "rec":
+            sp["temporal"], ss["temporal"] = _rec_init(k1, cfg)
+        else:
+            sp["temporal"], ss["temporal"] = L.attention_init(k1, cfg)
+        sp["ln2"], ss["ln2"] = L.rmsnorm_init(cfg.d_model)
+        sp["mlp"], ss["mlp"] = L.gelu_mlp_init(k2, cfg)
+        p["sub"].append(sp)
+        s["sub"].append(ss)
+    return p, s
+
+
+_SUB_SPEC_CACHE: dict = {}
+
+
+def _sub_specs(cfg, kind):
+    key = (cfg.name, kind)
+    if key not in _SUB_SPEC_CACHE:
+        sub_cfg = dataclass_with_pattern(cfg, (kind,))
+        specs = spec_tree_of(lambda: _group_init(jax.random.key(0), sub_cfg))
+        _SUB_SPEC_CACHE[key] = specs["sub"][0]
+    return _SUB_SPEC_CACHE[key]
+
+
+def _sub_apply(cfg, kind, sp, x, positions, *, state=None, rules=None):
+    sp = gather_params(sp, _sub_specs(cfg, kind), rules)  # JIT-FSDP regather
+    h_in = L.rmsnorm(x, sp["ln1"], cfg.norm_eps)
+    if kind == "rec":
+        h, new_state = rec_apply(cfg, sp["temporal"], h_in, state=state, rules=rules)
+    else:
+        cache = None
+        if state is not None:
+            cache = (state["k"], state["v"], state["len"])
+        h, new_kv = L.attention_apply(
+            cfg, sp["temporal"], h_in, positions,
+            causal=True, window=cfg.window, cache=cache,
+        )
+        new_state = (
+            {"k": new_kv[0], "v": new_kv[1], "len": new_kv[2]} if new_kv else None
+        )
+    x = constrain(x + h, ("batch", "seq", None), rules)
+    m = L.gelu_mlp_apply(sp["mlp"], L.rmsnorm(x, sp["ln2"], cfg.norm_eps))
+    return constrain(x + m, ("batch", "seq", None), rules), new_state
+
+
+def _plan(cfg: ModelConfig):
+    """(n_groups, tail_kinds): scan n_groups full pattern units, then run the
+    remainder layers unscanned."""
+    unit = len(cfg.pattern)
+    n_groups = cfg.n_layers // unit
+    tail = cfg.layer_kinds()[n_groups * unit :]
+    return n_groups, tail
+
+
+def init_lm(key, cfg: ModelConfig):
+    assert cfg.pattern, "hybrid config needs a layer pattern"
+    n_groups, tail = _plan(cfg)
+    k_emb, k_g, k_t, k_out = jax.random.split(key, 4)
+    gkeys = jax.random.split(k_g, max(n_groups, 1))
+    groups_p = jax.vmap(lambda k: _group_init(k, cfg)[0])(gkeys)
+    _, groups_s = _group_init(gkeys[0], cfg)
+    groups_s = jax.tree.map(
+        lambda ax: ("layers",) + ax, groups_s, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    tail_p, tail_s = [], []
+    tkeys = jax.random.split(k_t, max(len(tail), 1))
+    for kind, k in zip(tail, tkeys):
+        tp, ts = _group_init(k, dataclass_with_pattern(cfg, (kind,)))
+        tail_p.append(tp)
+        tail_s.append(ts)
+    dt = jnp.dtype(cfg.dtype)
+    params = {
+        "embed": (
+            jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), jnp.float32)
+            * cfg.d_model**-0.5
+        ).astype(dt),
+        "groups": groups_p,
+        "tail": tail_p,
+        "ln_f": L.rmsnorm_init(cfg.d_model)[0],
+        "unembed": (
+            jax.random.normal(k_out, (cfg.d_model, cfg.vocab), jnp.float32)
+            * cfg.d_model**-0.5
+        ).astype(dt),
+    }
+    specs = {
+        "embed": ("vocab", "embed"),
+        "groups": groups_s,
+        "tail": tail_s,
+        "ln_f": ("embed",),
+        "unembed": ("embed", "vocab"),
+    }
+    return params, specs
+
+
+def dataclass_with_pattern(cfg: ModelConfig, pattern):
+    import dataclasses
+
+    return dataclasses.replace(cfg, pattern=tuple(pattern))
+
+
+def forward(params, cfg: ModelConfig, tokens, *, rules=None, **_):
+    n_groups, tail = _plan(cfg)
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, ("batch", "seq", None), rules)
+    positions = jnp.arange(x.shape[1])
+
+    def group_apply(gp, x):
+        for kind, sp in zip(cfg.pattern, gp["sub"]):
+            x, _ = _sub_apply(cfg, kind, sp, x, positions, rules=rules)
+        return x
+
+    block = jax.checkpoint(
+        group_apply,
+        policy=L.remat_policy(),
+        prevent_cse=False,
+    )
+
+    def scan_body(x, gp):
+        return block(gp, x), None
+
+    if n_groups:
+        x, _ = jax.lax.scan(
+            scan_body, x, params["groups"], unroll=L.scan_unroll()
+        )
+    for kind, tp in zip(tail, params["tail"]):
+        x, _ = _sub_apply(cfg, kind, tp["sub"][0], x, positions, rules=rules)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ params["unembed"]
+    return constrain(logits, ("batch", "seq", "vocab"), rules), jnp.float32(0)
+
+
+def loss_fn(params, cfg, batch, *, rules=None, **kw):
+    logits, _ = forward(params, cfg, batch["tokens"], rules=rules, **kw)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), batch["labels"][..., None], axis=-1
+    )[..., 0]
+    return (lse - gold).mean()
+
+
+# -- decode -------------------------------------------------------------------------
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Per-layer state; attention layers cache only ``window`` KV slots."""
+    n_groups, tail = _plan(cfg)
+    dr = cfg.d_rnn or cfg.d_model
+    KV, Dh, CW = cfg.n_kv_heads, cfg.d_head, cfg.conv_width
+    wlen = min(cfg.window or max_len, max_len)
+    dt = jnp.dtype(cfg.dtype)
+
+    def unit_state(stacked: int):
+        def mk(shape, dtype):
+            return jnp.zeros(((stacked,) + shape) if stacked else shape, dtype)
+
+        states = []
+        for kind in cfg.pattern:
+            if kind == "rec":
+                states.append(
+                    {"h": mk((batch, dr), jnp.float32), "conv": mk((batch, CW - 1, dr), dt)}
+                )
+            else:
+                states.append(
+                    {"k": mk((batch, wlen, KV, Dh), dt), "v": mk((batch, wlen, KV, Dh), dt)}
+                )
+        return states
+
+    cache = {
+        "groups": unit_state(n_groups) if n_groups else [],
+        "tail": [
+            (
+                {"h": jnp.zeros((batch, dr), jnp.float32),
+                 "conv": jnp.zeros((batch, CW - 1, dr), dt)}
+                if kind == "rec"
+                else {"k": jnp.zeros((batch, wlen, KV, Dh), dt),
+                      "v": jnp.zeros((batch, wlen, KV, Dh), dt)}
+            )
+            for kind in tail
+        ],
+        "len": jnp.int32(0),
+    }
+
+    def unit_spec(stacked: bool):
+        pre = ("layers",) if stacked else ()
+        states = []
+        for kind in cfg.pattern:
+            if kind == "rec":
+                states.append(
+                    {"h": pre + ("batch", "rnn"), "conv": pre + ("batch", None, "rnn")}
+                )
+            else:
+                states.append(
+                    {"k": pre + ("batch", "seq_kv", "kv", None),
+                     "v": pre + ("batch", "seq_kv", "kv", None)}
+                )
+        return states
+
+    specs = {
+        "groups": unit_spec(True) if n_groups else [],
+        "tail": [
+            ({"h": ("batch", "rnn"), "conv": ("batch", None, "rnn")}
+             if kind == "rec"
+             else {"k": ("batch", "seq_kv", "kv", None),
+                   "v": ("batch", "seq_kv", "kv", None)})
+            for kind in tail
+        ],
+        "len": (),
+    }
+    return cache, specs
+
+
+def decode_fn(params, cfg: ModelConfig, cache, tokens, *, rules=None):
+    n_groups, tail = _plan(cfg)
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    pos = cache["len"]
+    wlen = cache["tail"][0]["k"].shape[1] if (tail and "k" in cache["tail"][0]) else None
+
+    def unit_apply(sub_params, sub_state, x):
+        new_states = []
+        for kind, sp, st in zip(cfg.pattern, sub_params, sub_state):
+            if kind == "rec":
+                x, ns = _sub_apply(cfg, kind, sp, x, None, state=st, rules=rules)
+                new_states.append(ns)
+            else:
+                # ring-buffer window cache: slot = pos % window
+                W = st["k"].shape[1]
+                slot = pos % W
+                h_in = L.rmsnorm(x, sp["ln1"], cfg.norm_eps)
+                out, ns = _window_decode_attn(cfg, sp["temporal"], h_in, st, slot, pos)
+                x = x + out
+                m = L.gelu_mlp_apply(sp["mlp"], L.rmsnorm(x, sp["ln2"], cfg.norm_eps))
+                x = x + m
+                new_states.append(ns)
+        return x, new_states
+
+    if n_groups:
+        def scan_body(x, inp):
+            gp, gs = inp
+            x, ns = unit_apply(gp["sub"], gs, x)
+            return x, ns
+
+        x, new_group_states = jax.lax.scan(
+            scan_body, x, (params["groups"], cache["groups"]),
+            unroll=L.scan_unroll(),
+        )
+    else:
+        new_group_states = cache["groups"]
+    new_tail = []
+    for kind, tp, ts in zip(tail, params["tail"], cache["tail"]):
+        x, ns = unit_apply([tp["sub"][0]], [ts], x)
+        new_tail.append(ns[0])
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ params["unembed"]
+    return logits, {
+        "groups": new_group_states,
+        "tail": new_tail,
+        "len": cache["len"] + 1,
+    }
+
+
+def _window_decode_attn(cfg, ap, x, st, slot, pos):
+    """MQA/GQA decode against a ring-buffer window cache."""
+    B = x.shape[0]
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = (x @ ap["wq"]).reshape(B, 1, H, Dh)
+    k_new = (x @ ap["wk"]).reshape(B, 1, KV, Dh)
+    v_new = (x @ ap["wv"]).reshape(B, 1, KV, Dh)
+    if cfg.qkv_bias:
+        q = q + ap["bq"].reshape(1, 1, H, Dh)
+        k_new = k_new + ap["bk"].reshape(1, 1, KV, Dh)
+        v_new = v_new + ap["bv"].reshape(1, 1, KV, Dh)
+    positions = jnp.full((1,), pos, jnp.int32)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k_new = L.rope(k_new, positions, cfg.rope_theta)
+    Wn = st["k"].shape[1]
+    k_cache = jax.lax.dynamic_update_slice(st["k"], k_new.astype(st["k"].dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(st["v"], v_new.astype(st["v"].dtype), (0, slot, 0, 0))
+    # ring slots hold positions pos-W+1..pos; valid = slot age < window & <= pos
+    ages = (slot - jnp.arange(Wn)) % Wn  # age of each slot in steps
+    kpos = pos - ages
+    valid = (kpos >= 0) & (kpos > pos - (cfg.window or Wn))
+    G = H // KV
+    qh = q.transpose(0, 2, 1, 3).reshape(B, KV, G, 1, Dh) * (Dh**-0.5)
+    kh = k_cache.transpose(0, 2, 1, 3)
+    vh = v_cache.transpose(0, 2, 1, 3)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qh, kh.astype(qh.dtype))
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s.astype(jnp.float32), -1).astype(qh.dtype)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vh.astype(qh.dtype))
+    o = o.reshape(B, H, 1, Dh).transpose(0, 2, 1, 3).reshape(B, 1, H * Dh)
+    return o @ ap["wo"], {"k": k_cache, "v": v_cache}

@@ -1,0 +1,131 @@
+"""Model dispatch: one uniform interface over the four family implementations.
+
+``get_model(cfg)`` returns a ``Model`` facade with
+  init(key) -> (params, specs)
+  loss_fn(params, batch, rules) -> scalar
+  prefill_fn(params, batch, rules) -> logits
+  init_decode_cache(batch, max_len) -> (cache, specs|None)
+  decode_fn(params, cache, tokens, rules) -> (logits, cache)
+plus ``batch_spec(shape)`` describing the model's inputs for a given assigned
+shape (used by input_specs in the launcher and by the data pipeline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, griffin, rwkv6, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    loss_fn: Callable
+    forward: Callable
+    init_decode_cache: Callable
+    decode_fn: Callable
+
+    def batch_spec(self, shape: ShapeConfig) -> dict[str, Any]:
+        """ShapeDtypeStruct-compatible description of one train/prefill batch
+        (token dims use the GLOBAL batch; the mesh shards them)."""
+        import jax
+
+        B, S = shape.global_batch, shape.seq_len
+        cfg = self.cfg
+        spec: dict[str, Any] = {}
+        if cfg.family == "encdec":
+            spec["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        if cfg.family == "vlm":
+            spec["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        spec["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if shape.kind == "train":
+            spec["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return spec
+
+
+def _transformer_model(cfg: ModelConfig) -> Model:
+    def loss(params, batch, rules=None):
+        return transformer.loss_fn(params, cfg, batch, rules=rules)
+
+    def fwd(params, batch, rules=None):
+        return transformer.forward(
+            params, cfg, batch["tokens"], rules=rules,
+            extra_embeds=batch.get("patch_embeds"),
+        )[0]
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_lm(key, cfg),
+        loss_fn=loss,
+        forward=fwd,
+        init_decode_cache=lambda b, m: transformer.init_decode_cache(cfg, b, m),
+        decode_fn=lambda p, c, t, rules=None: transformer.decode_fn(
+            p, cfg, c, t, rules=rules
+        ),
+    )
+
+
+def _rwkv_model(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda key: rwkv6.init_lm(key, cfg),
+        loss_fn=lambda p, b, rules=None: rwkv6.loss_fn(p, cfg, b, rules=rules),
+        forward=lambda p, b, rules=None: rwkv6.forward(
+            p, cfg, b["tokens"], rules=rules
+        )[0],
+        init_decode_cache=lambda b, m: rwkv6.init_decode_cache(cfg, b, m),
+        decode_fn=lambda p, c, t, rules=None: rwkv6.decode_fn(
+            p, cfg, c, t, rules=rules
+        ),
+    )
+
+
+def _griffin_model(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda key: griffin.init_lm(key, cfg),
+        loss_fn=lambda p, b, rules=None: griffin.loss_fn(p, cfg, b, rules=rules),
+        forward=lambda p, b, rules=None: griffin.forward(
+            p, cfg, b["tokens"], rules=rules
+        )[0],
+        init_decode_cache=lambda b, m: griffin.init_decode_cache(cfg, b, m),
+        decode_fn=lambda p, c, t, rules=None: griffin.decode_fn(
+            p, cfg, c, t, rules=rules
+        ),
+    )
+
+
+def _encdec_model(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda key: encdec.init_lm(key, cfg),
+        loss_fn=lambda p, b, rules=None: encdec.loss_fn(p, cfg, b, rules=rules),
+        forward=lambda p, b, rules=None: encdec.forward(
+            p, cfg, b["tokens"], frames=b["frames"], rules=rules
+        )[0],
+        init_decode_cache=lambda b, m: encdec.init_decode_cache(cfg, b, m),
+        decode_fn=lambda p, c, t, rules=None: encdec.decode_fn(
+            p, cfg, c, t, rules=rules
+        ),
+    )
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _transformer_model(cfg)
+    if cfg.family == "ssm":
+        return _rwkv_model(cfg)
+    if cfg.family == "hybrid":
+        return _griffin_model(cfg)
+    if cfg.family == "encdec":
+        return _encdec_model(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,274 @@
+"""RWKV6 "Finch" language model (attention-free, data-dependent decay).
+
+Block = time-mix (the WKV6 recurrence, accelerated by kernels/wkv6) +
+channel-mix, both with token-shift interpolation.  Decode carries O(1) state
+per layer — (B, H, K, V) WKV state plus the last-token activations for the
+two token-shifts — which is why rwkv6 runs the ``long_500k`` shape.
+
+Faithful-but-lean parameterization of arXiv:2404.05892: learned token-shift
+mixes for r/k/v/w/g, LoRA'd data-dependent decay
+``w_t = w0 + tanh(x_t A) B``, per-head bonus ``u``, per-head group-norm on
+the WKV output, SiLU output gate; squared-ReLU channel-mix.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.wkv6.ops import wkv6_decode_step, wkv6_op
+from repro.models import layers as L
+from repro.models.sharding import constrain, gather_params, spec_tree_of
+
+HEAD_SIZE = 64
+
+
+def _heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // HEAD_SIZE
+
+
+def _tmix_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    H, K = _heads(cfg), HEAD_SIZE
+    r = cfg.decay_lora
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    p, s = {}, {}
+    # token-shift interpolation weights (r, k, v, w, g)
+    p["mu"], s["mu"] = jnp.full((5, d), 0.5, jnp.float32), ("stack", "embed")
+    p["wr"], s["wr"] = L.dense_init(ks[0], d, d, "embed", "heads", dt)
+    p["wk"], s["wk"] = L.dense_init(ks[1], d, d, "embed", "heads", dt)
+    p["wv"], s["wv"] = L.dense_init(ks[2], d, d, "embed", "heads", dt)
+    p["wg"], s["wg"] = L.dense_init(ks[3], d, d, "embed", "heads", dt)
+    p["wo"], s["wo"] = L.dense_init(ks[4], d, d, "heads", "embed", dt)
+    # data-dependent decay LoRA: w_t = w0 + tanh(x A) B
+    p["w0"], s["w0"] = jnp.full((d,), -2.0, jnp.float32), ("heads",)
+    p["wa"], s["wa"] = L.dense_init(ks[5], d, r, "embed", "lora", dt)
+    p["wb"], s["wb"] = L.dense_init(ks[6], r, d, "lora", "heads", dt)
+    p["u"], s["u"] = (
+        jax.random.normal(ks[7], (H, K), jnp.float32) * 0.1,
+        ("heads", None),
+    )
+    p["ln_g"], s["ln_g"] = jnp.ones((d,), jnp.float32), ("heads",)
+    return p, s
+
+
+def _cmix_init(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["mu"], s["mu"] = jnp.full((2, d), 0.5, jnp.float32), ("stack", "embed")
+    p["wk"], s["wk"] = L.dense_init(ks[0], d, f, "embed", "mlp", dt)
+    p["wv"], s["wv"] = L.dense_init(ks[1], f, d, "mlp", "embed", dt)
+    p["wr"], s["wr"] = L.dense_init(ks[2], d, d, "embed", None, dt)
+    return p, s
+
+
+def block_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = L.rmsnorm_init(cfg.d_model)
+    p["tmix"], s["tmix"] = _tmix_init(k1, cfg)
+    p["ln2"], s["ln2"] = L.rmsnorm_init(cfg.d_model)
+    p["cmix"], s["cmix"] = _cmix_init(k2, cfg)
+    return p, s
+
+
+def _token_shift(x, last: Optional[jnp.ndarray]):
+    """xs[t] = x[t-1]; position 0 takes `last` (decode state) or zeros."""
+    first = jnp.zeros_like(x[:, :1]) if last is None else last
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def tmix_apply(cfg, p, x, *, wkv_state=None, shift_last=None, wkv_impl="ref"):
+    """x (B, T, d).  Returns (out, (new_wkv_state, new_shift_last))."""
+    B, T, d = x.shape
+    H, K = _heads(cfg), HEAD_SIZE
+    xs = _token_shift(x, shift_last)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (_mix(x, xs, mu[i]) for i in range(5))
+    r = (xr @ p["wr"]).reshape(B, T, H, K)
+    k = (xk @ p["wk"]).reshape(B, T, H, K)
+    v = (xv @ p["wv"]).reshape(B, T, H, K)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = p["w0"] + jnp.tanh(xw @ p["wa"]) @ p["wb"]  # (B, T, d) log-log decay
+    decay = jnp.exp(-jnp.exp(w.astype(jnp.float32))).reshape(B, T, H, K)
+
+    if T == 1 and wkv_state is not None:
+        o, new_state = wkv6_decode_step(
+            r[:, 0].astype(jnp.float32),
+            k[:, 0].astype(jnp.float32),
+            v[:, 0].astype(jnp.float32),
+            decay[:, 0],
+            p["u"],
+            wkv_state,
+        )
+        o = o[:, None]  # (B, 1, H, K)
+    else:
+        o, new_state = wkv6_op(
+            r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+            decay, p["u"], wkv_state, impl=wkv_impl,
+        )
+    # per-head group norm, then gate
+    o = o.reshape(B, T, H, K)
+    o32 = o.astype(jnp.float32)
+    o = (o32 - o32.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        o32.var(-1, keepdims=True) + 64e-5
+    )
+    o = (o.reshape(B, T, d) * p["ln_g"]).astype(x.dtype)
+    out = (o * g) @ p["wo"]
+    return out, (new_state, x[:, -1:])
+
+
+def cmix_apply(cfg, p, x, *, shift_last=None):
+    xs = _token_shift(x, shift_last)
+    mu = p["mu"].astype(x.dtype)
+    xk, xr = _mix(x, xs, mu[0]), _mix(x, xs, mu[1])
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (kk @ p["wv"])
+    return out, x[:, -1:]
+
+
+_BLOCK_SPEC_CACHE: dict = {}
+
+
+def _block_specs(cfg):
+    if cfg.name not in _BLOCK_SPEC_CACHE:
+        _BLOCK_SPEC_CACHE[cfg.name] = spec_tree_of(
+            lambda: block_init(jax.random.key(0), cfg)
+        )
+    return _BLOCK_SPEC_CACHE[cfg.name]
+
+
+def block_apply(cfg, bp, x, *, state=None, rules=None, wkv_impl="ref"):
+    """state = None (train/prefill) or dict(wkv, shift_t, shift_c)."""
+    st = state or {}
+    bp = gather_params(bp, _block_specs(cfg), rules)  # JIT-FSDP regather
+    h, (wkv, shift_t) = tmix_apply(
+        cfg, bp["tmix"], L.rmsnorm(x, bp["ln1"], cfg.norm_eps),
+        wkv_state=st.get("wkv"), shift_last=st.get("shift_t"),
+        wkv_impl=wkv_impl,
+    )
+    x = constrain(x + h, ("batch", "seq", None), rules)
+    c, shift_c = cmix_apply(
+        cfg, bp["cmix"], L.rmsnorm(x, bp["ln2"], cfg.norm_eps),
+        shift_last=st.get("shift_c"),
+    )
+    x = constrain(x + c, ("batch", "seq", None), rules)
+    new_state = {"wkv": wkv, "shift_t": shift_t, "shift_c": shift_c}
+    return x, new_state
+
+
+# -- model --------------------------------------------------------------------------
+
+
+def init_lm(key, cfg: ModelConfig):
+    k_emb, k_blocks, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks_p = jax.vmap(lambda k: block_init(k, cfg)[0])(layer_keys)
+    _, blocks_s = block_init(layer_keys[0], cfg)
+    blocks_s = jax.tree.map(
+        lambda ax: ("layers",) + ax, blocks_s, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    dt = jnp.dtype(cfg.dtype)
+    params = {
+        "embed": (
+            jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), jnp.float32)
+            * cfg.d_model**-0.5
+        ).astype(dt),
+        "blocks": blocks_p,
+        "ln_f": L.rmsnorm_init(cfg.d_model)[0],
+        "unembed": (
+            jax.random.normal(k_out, (cfg.d_model, cfg.vocab), jnp.float32)
+            * cfg.d_model**-0.5
+        ).astype(dt),
+    }
+    specs = {
+        "embed": ("vocab", "embed"),
+        "blocks": blocks_s,
+        "ln_f": ("embed",),
+        "unembed": ("embed", "vocab"),
+    }
+    return params, specs
+
+
+def forward(params, cfg: ModelConfig, tokens, *, rules=None, wkv_impl="ref", **_):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, ("batch", "seq", None), rules)
+    block = jax.checkpoint(
+        lambda bp, x: block_apply(cfg, bp, x, rules=rules, wkv_impl=wkv_impl)[0],
+        policy=L.remat_policy(),
+        prevent_cse=False,
+    )
+
+    def scan_body(x, bp):
+        return block(bp, x), jnp.float32(0)
+
+    x, _ = jax.lax.scan(scan_body, x, params["blocks"], unroll=L.scan_unroll())
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ params["unembed"]
+    return constrain(logits, ("batch", "seq", "vocab"), rules), jnp.float32(0)
+
+
+def loss_fn(params, cfg, batch, *, rules=None, **kw):
+    logits, _ = forward(params, cfg, batch["tokens"], rules=rules, **kw)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), batch["labels"][..., None], axis=-1
+    )[..., 0]
+    return (lse - gold).mean()
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """O(1)-in-seq state: WKV (L,B,H,K,K) + two token-shift slots."""
+    H, K = _heads(cfg), HEAD_SIZE
+    Lr = cfg.n_layers
+    d = cfg.d_model
+    cache = {
+        "wkv": jnp.zeros((Lr, batch, H, K, K), jnp.float32),
+        "shift_t": jnp.zeros((Lr, batch, 1, d), jnp.dtype(cfg.dtype)),
+        "shift_c": jnp.zeros((Lr, batch, 1, d), jnp.dtype(cfg.dtype)),
+        "len": jnp.int32(0),
+    }
+    specs = {
+        "wkv": ("layers", "batch", "heads", None, None),
+        "shift_t": ("layers", "batch", None, None),
+        "shift_c": ("layers", "batch", None, None),
+        "len": (),
+    }
+    return cache, specs
+
+
+def decode_fn(params, cfg: ModelConfig, cache, tokens, *, rules=None):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, ("batch", None, None), rules)
+
+    def scan_body(x, inp):
+        bp, wkv, sh_t, sh_c = inp
+        state = {"wkv": wkv, "shift_t": sh_t, "shift_c": sh_c}
+        x, new = block_apply(cfg, bp, x, state=state, rules=rules)
+        return x, (new["wkv"], new["shift_t"], new["shift_c"])
+
+    x, (wkv, sh_t, sh_c) = jax.lax.scan(
+        scan_body,
+        x,
+        (params["blocks"], cache["wkv"], cache["shift_t"], cache["shift_c"]),
+        unroll=L.scan_unroll(),
+    )
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ params["unembed"]
+    return logits, {
+        "wkv": wkv,
+        "shift_t": sh_t,
+        "shift_c": sh_c,
+        "len": cache["len"] + 1,
+    }

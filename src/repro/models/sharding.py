@@ -1,0 +1,141 @@
+"""Logical-axis sharding rules (MaxText-style), mesh-shape agnostic.
+
+Every parameter/activation is annotated with a tuple of *logical* axis names;
+``logical_to_spec`` maps them onto the physical mesh axes:
+
+    batch   -> (pod, data)     activations' leading dim (pure DP across pods)
+    embed   -> data            FSDP: params + optimizer states sharded over
+                               the data axis, all-gathered per layer
+    heads   -> model           TP over the fused head*head_dim projection dim
+    kv      -> model           TP over fused kv_heads*head_dim (when it divides)
+    mlp     -> model           TP over d_ff
+    experts -> model           EP: expert bank sharded over the model axis
+    vocab   -> model           TP over the (un)embedding vocab dim
+    seq     -> None             (sequence kept whole by default; the decode
+                                cache can opt into 'seq->model' SP, see below)
+    layers / stack / conv / window / lora -> None (scan-stacked dims)
+
+``param_specs`` trees are built by the model inits alongside the params and
+carry these names; nothing in the model code mentions physical axes.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES: dict[str, Optional[tuple]] = {
+    "batch": ("pod", "data"),
+    "embed": ("data",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    "seq": None,
+    "seq_kv": None,
+    "layers": None,
+    "stack": None,
+    "conv": None,
+    "window": None,
+    "lora": None,
+    "rnn": ("model",),
+    "state": None,
+    None: None,
+}
+
+
+def rules_for_mesh(mesh: Mesh, overrides: dict | None = None) -> dict:
+    """Drop rule components whose mesh axis does not exist (e.g. 'pod' on the
+    single-pod mesh) and apply per-experiment overrides (§Perf knobs).
+    Mesh-axis sizes ride along under '_sizes' (used by the MoE group math)."""
+    axes = set(mesh.axis_names)
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    out = {}
+    for k, v in rules.items():
+        if isinstance(k, str) and k.startswith("_"):
+            out[k] = v  # private metadata (e.g. _moe_impl), not an axis rule
+        elif v is None:
+            out[k] = None
+        else:
+            kept = tuple(a for a in v if a in axes)
+            out[k] = kept if kept else None
+    out["_sizes"] = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out["_mesh"] = mesh
+    return out
+
+
+def logical_to_spec(logical: tuple, rules: dict) -> P:
+    """('embed', 'heads') -> PartitionSpec(('data',), ('model',))."""
+    parts = []
+    for name in logical:
+        r = rules.get(name, None)
+        if r is None:
+            parts.append(None)
+        elif len(r) == 1:
+            parts.append(r[0])
+        else:
+            parts.append(r)
+    return P(*parts)
+
+
+def tree_to_shardings(spec_tree, mesh: Mesh, rules: dict | None = None):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    rules = rules or rules_for_mesh(mesh)
+    return jax.tree.map(
+        lambda logical: NamedSharding(mesh, logical_to_spec(logical, rules)),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def constrain(x, logical: tuple, rules: dict | None):
+    """with_sharding_constraint using logical names (no-op without rules)."""
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, logical_to_spec(logical, rules))
+
+
+_FSDP_AXES = {"data", "pod"}
+
+
+def gather_params(tree, spec_tree, rules: dict | None):
+    """Just-in-time FSDP regather: constrain every param leaf to its spec with
+    the data/pod (FSDP) mesh axes dropped, keeping only tensor-parallel axes.
+
+    Called at the TOP of each scanned block body, this makes XLA all-gather
+    the layer's weight slice (params-sized traffic, one layer live at a time)
+    instead of all-reducing activation-sized partial matmul sums — the
+    standard ZeRO-3 streaming pattern.  At rest, params/grads/moments stay
+    fully sharded over (data × model)."""
+    if rules is None:
+        return tree
+
+    def f(p, logical):
+        l2 = tuple(
+            None
+            if (n is not None and rules.get(n) and set(rules[n]) & _FSDP_AXES)
+            else n
+            for n in logical
+        )
+        return constrain(p, l2, rules)
+
+    return jax.tree.map(f, tree, spec_tree)
+
+
+def spec_tree_of(init_fn):
+    """Extract the STATIC logical-spec tree of an ``init() -> (params, specs)``
+    initializer without allocating any arrays (eval_shape + side channel)."""
+    cap = {}
+
+    def wrapper():
+        p, s = init_fn()
+        cap["s"] = s
+        return p
+
+    jax.eval_shape(wrapper)
+    return cap["s"]

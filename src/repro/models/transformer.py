@@ -1,0 +1,225 @@
+"""Decoder-only transformer LM (dense / MoE / VLM backbone).
+
+Layers are **stacked and scanned**: block params carry a leading (L, ...)
+axis and the forward pass is one ``lax.scan`` over it — the compiled HLO is
+depth-independent, which is what keeps 94-layer × 512-device lowering
+tractable.  ``jax.checkpoint`` (remat) wraps the scanned block with a
+dots-saveable policy.
+
+Three entry points per model (matching the assigned shape kinds):
+  * ``loss_fn``     — teacher-forced CE + MoE aux (train_4k);
+  * ``prefill_fn``  — forward only, returns logits (prefill_32k);
+  * ``decode_fn``   — one token against a (L, B, Smax, KV, Dh) cache
+                      (decode_32k / long_500k).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.moe import moe_apply, moe_init
+from repro.models.sharding import constrain, gather_params, spec_tree_of
+
+
+def _remat_policy():
+    return L.remat_policy()
+
+
+# -- init -------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = L.rmsnorm_init(cfg.d_model)
+    p["attn"], s["attn"] = L.attention_init(ks[0], cfg)
+    p["ln2"], s["ln2"] = L.rmsnorm_init(cfg.d_model)
+    if cfg.is_moe:
+        p["moe"], s["moe"] = moe_init(ks[1], cfg)
+    else:
+        p["mlp"], s["mlp"] = L.mlp_init(ks[1], cfg)
+    return p, s
+
+
+def init_lm(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    k_emb, k_blocks, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks_p = jax.vmap(lambda k: _block_init(k, cfg)[0])(layer_keys)
+    _, blocks_s = _block_init(layer_keys[0], cfg)
+    blocks_s = jax.tree.map(
+        lambda ax: ("layers",) + ax, blocks_s, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    params = {
+        "embed": (
+            jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), jnp.float32)
+            * cfg.d_model**-0.5
+        ).astype(dt),
+        "blocks": blocks_p,
+        "ln_f": L.rmsnorm_init(cfg.d_model)[0],
+        "unembed": (
+            jax.random.normal(k_out, (cfg.d_model, cfg.vocab), jnp.float32)
+            * cfg.d_model**-0.5
+        ).astype(dt),
+    }
+    specs = {
+        "embed": ("vocab", "embed"),
+        "blocks": blocks_s,
+        "ln_f": ("embed",),
+        "unembed": ("embed", "vocab"),
+    }
+    return params, specs
+
+
+# -- forward ------------------------------------------------------------------------
+
+
+_BLOCK_SPEC_CACHE: dict = {}
+
+
+def _block_specs(cfg: ModelConfig):
+    if cfg.name not in _BLOCK_SPEC_CACHE:
+        _BLOCK_SPEC_CACHE[cfg.name] = spec_tree_of(
+            lambda: _block_init(jax.random.key(0), cfg)
+        )
+    return _BLOCK_SPEC_CACHE[cfg.name]
+
+
+def _block_apply(cfg: ModelConfig, bp, x, positions, rules, attn_impl):
+    bp = gather_params(bp, _block_specs(cfg), rules)  # JIT-FSDP regather
+    h, _ = L.attention_apply(
+        cfg,
+        bp["attn"],
+        L.rmsnorm(x, bp["ln1"], cfg.norm_eps),
+        positions,
+        causal=True,
+        window=cfg.window,
+        attn_impl=attn_impl,
+    )
+    x = x + h
+    x = constrain(x, ("batch", "seq", None), rules)
+    y = L.rmsnorm(x, bp["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        m, aux = moe_apply(cfg, bp["moe"], y, rules)
+    else:
+        m, aux = L.mlp_apply(bp["mlp"], y), jnp.float32(0)
+    x = x + m
+    return constrain(x, ("batch", "seq", None), rules), aux
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens,  # (B, S) int32
+    *,
+    rules=None,
+    attn_impl: str = "blockwise",
+    extra_embeds: Optional[jnp.ndarray] = None,  # VLM patch prefix (B, P, d)
+):
+    """Returns (logits (B, S_total, vocab), aux_loss)."""
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    x = constrain(x, ("batch", "seq", None), rules)
+
+    raw_block = functools.partial(
+        _block_apply, cfg, positions=positions, rules=rules, attn_impl=attn_impl
+    )
+    block = jax.checkpoint(
+        lambda bp, x: raw_block(bp, x), policy=_remat_policy(), prevent_cse=False
+    )
+
+    def scan_body(x, bp):
+        x, aux = block(bp, x)
+        return x, aux
+
+    x, auxes = jax.lax.scan(scan_body, x, params["blocks"], unroll=L.scan_unroll())
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ params["unembed"]
+    logits = constrain(logits, ("batch", "seq", "vocab"), rules)
+    return logits, auxes.sum()
+
+
+def loss_fn(
+    params, cfg: ModelConfig, batch, *, rules=None, attn_impl="blockwise",
+    aux_coef: float = 0.01,
+):
+    """batch = {'tokens': (B,S), 'labels': (B,S)} -> scalar loss."""
+    logits, aux = forward(
+        params, cfg, batch["tokens"], rules=rules, attn_impl=attn_impl,
+        extra_embeds=batch.get("patch_embeds"),
+    )
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:  # VLM prefix: score token tail only
+        logits = logits[:, logits.shape[1] - labels.shape[1] :]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1
+    )[..., 0]
+    ce = (lse - gold).mean()
+    return ce + aux_coef * aux
+
+
+# -- decode -------------------------------------------------------------------------
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int):
+    k, v, spec = L.make_kv_cache(cfg, batch, max_len, cfg.n_layers)
+    return {"k": k, "v": v, "len": jnp.int32(0)}, {
+        "k": spec,
+        "v": spec,
+        "len": (),
+    }
+
+
+def decode_fn(
+    params,
+    cfg: ModelConfig,
+    cache,
+    tokens,  # (B, 1) int32 -- the new token
+    *,
+    rules=None,
+):
+    """One decode step.  Returns (logits (B, 1, vocab), new_cache)."""
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, ("batch", None, None), rules)
+    pos = cache["len"]
+    positions = jnp.full((1,), pos, jnp.int32)
+
+    def scan_body(x, inp):
+        bp, k_l, v_l = inp
+        bp = gather_params(bp, _block_specs(cfg), rules)
+        h, new_kv = L.attention_apply(
+            cfg,
+            bp["attn"],
+            L.rmsnorm(x, bp["ln1"], cfg.norm_eps),
+            positions,
+            causal=True,
+            window=cfg.window,
+            cache=(k_l, v_l, pos),
+        )
+        x = x + h
+        y = L.rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            m, _ = moe_apply(cfg, bp["moe"], y, rules)
+        else:
+            m = L.mlp_apply(bp["mlp"], y)
+        x = x + m
+        return x, (new_kv[0], new_kv[1])
+
+    x, (new_k, new_v) = jax.lax.scan(
+        scan_body, x, (params["blocks"], cache["k"], cache["v"]),
+        unroll=L.scan_unroll(),
+    )
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ params["unembed"]
+    new_cache = {"k": new_k, "v": new_v, "len": cache["len"] + 1}
+    return logits, new_cache

@@ -1,0 +1,91 @@
+"""AdamW + cosine schedule + global-norm clipping (sharded-state friendly).
+
+Optimizer moments mirror the parameter pytree, so the same logical-axis
+specs shard them (ZeRO-1 over the 'embed'→data FSDP rule: each data shard
+owns the slice of m/v matching its parameter slice).  Moments are fp32
+regardless of the parameter dtype (mixed-precision training discipline).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray  # () int32
+    m: dict
+    v: dict
+
+
+def adamw_init(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.int32(0), m=zeros, v=jax.tree.map(jnp.copy, zeros))
+
+
+def opt_state_specs(param_specs) -> OptState:
+    """Logical-axis specs for the optimizer state (mirrors params)."""
+    return OptState(step=(), m=param_specs, v=param_specs)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def cosine_schedule(step, *, peak_lr, warmup_steps, total_steps, final_frac=0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip(
+        (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0, 1
+    )
+    cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def adamw_update(
+    params,
+    grads,
+    opt: OptState,
+    *,
+    peak_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 10_000,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+):
+    """One AdamW step with global-norm clipping.  Returns (params, opt, stats)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = opt.step + 1
+    lr = cosine_schedule(
+        step, peak_lr=peak_lr, warmup_steps=warmup_steps, total_steps=total_steps
+    )
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        update = update + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * update
+        return p_new.astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, opt.m, opt.v)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return (
+        new_params,
+        OptState(step=step, m=new_m, v=new_v),
+        {"grad_norm": gnorm, "lr": lr},
+    )

@@ -1,0 +1,17 @@
+"""Branching problems (plug-ins for the paper's Algorithm 1 / 2 structure)."""
+
+from repro.problems.sequential import (
+    SeqStats,
+    reduce_instance,
+    branch_once,
+    solve_sequential,
+    expand_frontier,
+)
+
+__all__ = [
+    "SeqStats",
+    "reduce_instance",
+    "branch_once",
+    "solve_sequential",
+    "expand_frontier",
+]

@@ -1,0 +1,3 @@
+from repro.serving.balancer import BalancerState, RequestBatch, rebalance
+
+__all__ = ["BalancerState", "RequestBatch", "rebalance"]

@@ -1,0 +1,53 @@
+"""Semi-centralized serving balancer: the paper's guarantees, restated."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.balancer import BalancerState, RequestBatch, rebalance, simulate
+
+
+def test_rebalance_moves_heaviest_to_neediest():
+    reps = [
+        RequestBatch(4, [], [10, 99, 5]),  # donor with queue
+        RequestBatch(4, [], []),  # starving replica
+    ]
+    state = BalancerState(reps)
+    moved = rebalance(state)
+    assert moved == 1
+    assert 99 in reps[1].queued_work  # heaviest request moved (§3.4 priority)
+
+
+def test_failure_free_matching():
+    """A matched receiver ALWAYS gets a request: donors must have a queue."""
+    reps = [RequestBatch(4, [1], []), RequestBatch(4, [], [])]
+    state = BalancerState(reps)
+    moved = rebalance(state)
+    assert moved == 0  # nobody has queued work -> no (failing) match attempted
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.integers(1, 64), min_size=4, max_size=60),
+    st.integers(2, 8),
+)
+def test_work_conservation(works, replicas):
+    """No request is lost or duplicated across rebalancing rounds."""
+    reps = [RequestBatch(4, [], []) for _ in range(replicas)]
+    reps[0].queued_work = list(works)
+    state = BalancerState(reps)
+    for _ in range(5):
+        rebalance(state)
+        total = sorted(
+            w for r in reps for w in (r.active_work + r.queued_work)
+        )
+        assert total == sorted(works)
+
+
+def test_balancing_reduces_makespan():
+    works = list(np.random.default_rng(0).integers(8, 128, 48))
+    off = simulate(8, 4, works, balance=False)
+    on = simulate(8, 4, works, balance=True)
+    assert on["rounds"] < off["rounds"]
+    assert on["idle_slot_steps"] < off["idle_slot_steps"]
+    # control plane: two integers per replica per round (paper goal #2)
+    assert on["control_ints_per_round"] == 16

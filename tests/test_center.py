@@ -1,0 +1,60 @@
+"""Center logic (paper Alg. 3): matching, pinning, cycle check, best value."""
+
+from repro.core.center import CenterState, Status
+
+
+def test_offer_best_verifies():
+    c = CenterState(num_workers=3)
+    assert c.offer_best(1, 10)
+    assert not c.offer_best(2, 12)  # center re-verifies claims
+    assert c.offer_best(2, 7)
+    assert c.best_holder == 2
+
+
+def test_available_assignment_pins():
+    c = CenterState(num_workers=3, seed=1)
+    w = c.on_available(2)
+    assert w in (1, 3)
+    assert c.status[2] == Status.ASSIGNED
+    assert c.assigned_to[2] == w
+
+
+def test_no_donor_stays_available():
+    c = CenterState(num_workers=2)
+    c.status[1] = Status.AVAILABLE
+    got = c.on_available(2)  # only worker 1 left and it is not RUNNING
+    assert got is None
+    assert c.status[2] == Status.AVAILABLE
+
+
+def test_started_running_feeds_waiting_available():
+    c = CenterState(num_workers=3)
+    c.status[3] = Status.AVAILABLE
+    pair = c.on_started_running(1)
+    assert pair == (1, 3)
+    assert c.status[3] == Status.ASSIGNED
+
+
+def test_cycle_check():
+    """§3.2: before assigning r -> w, follow the chain from r to avoid
+    creating a dependency cycle."""
+    c = CenterState(num_workers=2, seed=0)
+    c.assigned_to[1] = 2  # 1 waits on 2
+    # 2 asks for work; the only candidate donor is 1, but 1's chain leads to 2
+    got = c.get_next_working_node(2)
+    assert got is None
+
+
+def test_priority_policy_picks_heaviest():
+    c = CenterState(num_workers=3, policy="priority")
+    c.on_metadata(1, 5)
+    c.on_metadata(3, 9)
+    assert c.get_next_working_node(2) == 3
+
+
+def test_all_idle():
+    c = CenterState(num_workers=2)
+    assert not c.all_idle()
+    c.status[1] = Status.AVAILABLE
+    c.status[2] = Status.ASSIGNED  # ASSIGNED counts as idle (§3.3)
+    assert c.all_idle()

@@ -1,0 +1,46 @@
+"""Data pipeline determinism: the fault-tolerance contract."""
+
+import numpy as np
+
+from repro.data.pipeline import SyntheticTokens
+
+
+def test_restart_determinism():
+    a = SyntheticTokens(vocab=1000, seq_len=33, global_batch=8, seed=5)
+    b1 = a.next_batch()
+    b2 = a.next_batch()
+    b = SyntheticTokens(vocab=1000, seq_len=33, global_batch=8, seed=5)
+    b.restore({"step": 1})  # resume after the first step
+    r2 = b.next_batch()
+    assert (np.asarray(b2["tokens"]) == np.asarray(r2["tokens"])).all()
+
+
+def test_shards_partition_global_batch():
+    """num_shards=4 shards concatenate... each shard is its own slice and
+    different shards differ (counter-mode keyed by shard)."""
+    p0 = SyntheticTokens(vocab=512, seq_len=17, global_batch=8, seed=1)
+    s0 = p0._batch_np(0, shard=0, num_shards=4)
+    s1 = p0._batch_np(0, shard=1, num_shards=4)
+    assert s0.shape == (2, 17)
+    assert not (s0 == s1).all()
+    # re-generating the same (step, shard) is identical
+    again = p0._batch_np(0, shard=1, num_shards=4)
+    assert (s1 == again).all()
+
+
+def test_labels_are_shifted_inputs():
+    p = SyntheticTokens(vocab=512, seq_len=33, global_batch=2, seed=0)
+    b = p.next_batch()
+    assert b["tokens"].shape == (2, 32)
+    assert b["labels"].shape == (2, 32)
+
+
+def test_learnable_pattern_exists():
+    """The bigram pattern: token[t+1] - token[t] is constant (mod veff) for
+    most positions of a sequence — a model CAN reduce loss below unigram."""
+    p = SyntheticTokens(vocab=4096, seq_len=256, global_batch=4, seed=2)
+    toks = np.asarray(p.next_batch()["tokens"])
+    for row in toks:
+        diffs = (row[1:].astype(int) - row[:-1].astype(int)) % min(4096, 32768)
+        vals, counts = np.unique(diffs, return_counts=True)
+        assert counts.max() > len(diffs) * 0.4  # dominant delta exists

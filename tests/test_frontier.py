@@ -1,0 +1,99 @@
+"""Frontier push/pop properties (hypothesis): never loses or duplicates."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.frontier import (
+    make_frontier,
+    pop_deepest,
+    pop_shallowest,
+    push_many,
+)
+
+W = 2
+
+
+def _push(f, depth_vals):
+    k = len(depth_vals)
+    masks = jnp.tile(jnp.arange(1, k + 1, dtype=jnp.uint32)[:, None], (1, W))
+    sols = jnp.zeros((k, W), jnp.uint32)
+    depths = jnp.asarray(depth_vals, jnp.int32)
+    valid = jnp.ones((k,), bool)
+    return push_many(f, masks, sols, depths, valid)
+
+
+def test_push_pop_deepest():
+    f = make_frontier(8, W)
+    f = _push(f, [3, 1, 5])
+    f, masks, sols, depths, valid = pop_deepest(f, 2)
+    assert valid.all()
+    assert sorted(np.asarray(depths).tolist()) == [3, 5]
+    assert int(f.pending()) == 1
+
+
+def test_pop_shallowest():
+    f = make_frontier(8, W)
+    f = _push(f, [3, 1, 5])
+    f, m, s, d, valid = pop_shallowest(f)
+    assert bool(valid) and int(d) == 1
+    assert int(f.pending()) == 2
+
+
+def test_pop_empty_invalid():
+    f = make_frontier(4, W)
+    f, m, s, d, valid = pop_shallowest(f)
+    assert not bool(valid)
+    f, masks, sols, depths, valid = pop_deepest(f, 2)
+    assert not bool(valid.any())
+
+
+def test_overflow_flag():
+    f = make_frontier(2, W)
+    f = _push(f, [1, 2])
+    assert not bool(f.overflow)
+    f = _push(f, [3])
+    assert bool(f.overflow)
+    assert int(f.pending()) == 2  # dropped, not corrupted
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(
+        st.one_of(
+            st.tuples(st.just("push"), st.lists(st.integers(0, 100), min_size=1, max_size=4)),
+            st.tuples(st.just("pop_deep"), st.integers(1, 3)),
+            st.tuples(st.just("pop_shallow"), st.just(0)),
+        ),
+        min_size=1,
+        max_size=40,
+    )
+)
+def test_multiset_conservation(ops):
+    """The frontier behaves as a multiset of depths: pushes add, pops remove
+    the correct extremum, nothing is lost while capacity is respected."""
+    cap = 32
+    f = make_frontier(cap, W)
+    model = []  # reference multiset of depths
+    for op, arg in ops:
+        if op == "push":
+            take = arg[: max(0, cap - len(model))]
+            f = _push(f, arg)
+            model.extend(take)
+        elif op == "pop_deep":
+            f, _, _, depths, valid = pop_deepest(f, arg)
+            got = sorted(
+                int(d) for d, v in zip(np.asarray(depths), np.asarray(valid)) if v
+            )
+            want = sorted(model, reverse=True)[: len(got)]
+            assert got == sorted(want)
+            for d in got:
+                model.remove(d)
+        else:
+            f, _, _, d, valid = pop_shallowest(f)
+            if model:
+                assert bool(valid) and int(d) == min(model)
+                model.remove(int(d))
+            else:
+                assert not bool(valid)
+        assert int(f.pending()) == len(model)

@@ -1,0 +1,61 @@
+"""Flash-attention kernel + blockwise jnp path: sweep vs the exact oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import (
+    attention_ref,
+    blockwise_attention,
+    flash_attention,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def mk(B, Sq, Sk, Hq, Hkv, D, dtype):
+    f = lambda *s: jnp.asarray(RNG.standard_normal(s), dtype)
+    return f(B, Sq, Hq, D), f(B, Sk, Hkv, D), f(B, Sk, Hkv, D)
+
+
+CASES = [
+    dict(B=2, Sq=64, Sk=64, Hq=4, Hkv=2, D=32, causal=True, window=None),
+    dict(B=1, Sq=128, Sk=128, Hq=4, Hkv=1, D=64, causal=True, window=32),
+    dict(B=2, Sq=1, Sk=96, Hq=8, Hkv=4, D=32, causal=True, window=None),
+    dict(B=1, Sq=50, Sk=50, Hq=2, Hkv=2, D=16, causal=False, window=None),
+    dict(B=1, Sq=70, Sk=70, Hq=2, Hkv=1, D=32, causal=True, window=None),
+    dict(B=1, Sq=1, Sk=77, Hq=4, Hkv=2, D=64, causal=True, window=24),
+    dict(B=3, Sq=33, Sk=33, Hq=6, Hkv=3, D=8, causal=True, window=16),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_kernel(case, dtype):
+    q, k, v = mk(case["B"], case["Sq"], case["Sk"], case["Hq"], case["Hkv"],
+                 case["D"], dtype)
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), causal=case["causal"],
+                        window=case["window"])
+    got = flash_attention(q, k, v, causal=case["causal"], window=case["window"],
+                          block_q=32, block_k=32)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    assert float(jnp.abs(ref - got.astype(jnp.float32)).max()) < tol
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_blockwise_path(case):
+    q, k, v = mk(case["B"], case["Sq"], case["Sk"], case["Hq"], case["Hkv"],
+                 case["D"], jnp.float32)
+    ref = attention_ref(q, k, v, causal=case["causal"], window=case["window"])
+    got = blockwise_attention(q, k, v, causal=case["causal"],
+                              window=case["window"], block_k=16)
+    assert float(jnp.abs(ref - got).max()) < 1e-5
+
+
+def test_block_size_invariance():
+    q, k, v = mk(1, 96, 96, 2, 2, 32, jnp.float32)
+    ref = attention_ref(q, k, v, causal=True, window=None)
+    for bq, bk in [(16, 16), (32, 64), (96, 96), (128, 128)]:
+        got = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+        assert float(jnp.abs(ref - got).max()) < 1e-5, (bq, bk)

@@ -1,0 +1,61 @@
+"""Pallas bitset-degree kernel: shape sweep vs the jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs.generators import erdos_renyi
+from repro.kernels.bitset_ops import (
+    batched_degrees_ref,
+    degrees_op,
+    max_degree_vertex,
+    max_degree_vertex_ref,
+)
+
+
+def _random_masks(n, W, T, seed):
+    rng = np.random.default_rng(seed)
+    masks = rng.integers(0, 2**32, size=(T, W), dtype=np.uint32)
+    rem = n % 32
+    if rem:
+        masks[:, -1] &= np.uint32((1 << rem) - 1)
+    return masks
+
+
+@pytest.mark.parametrize(
+    "n,T,block",
+    [(32, 4, 2), (64, 16, 8), (100, 7, 4), (128, 32, 8), (257, 9, 8), (512, 24, 16)],
+)
+def test_kernel_matches_ref(n, T, block):
+    g = erdos_renyi(n, 0.08, n * 31 + T)
+    masks = jnp.asarray(_random_masks(n, g.W, T, T))
+    adj = jnp.asarray(g.adj)
+    got = degrees_op(adj, masks, block_tasks=block)
+    want = batched_degrees_ref(adj, masks)
+    assert (got == want).all()
+
+
+def test_argmax_composition():
+    g = erdos_renyi(96, 0.15, 5)
+    masks = jnp.asarray(_random_masks(96, g.W, 10, 3))
+    adj = jnp.asarray(g.adj)
+    u1, d1 = max_degree_vertex(adj, masks)
+    u2, d2 = max_degree_vertex_ref(adj, masks)
+    assert (d1 == d2).all()
+    # argmax ties may differ only if degrees tie; verify via degree equality
+    deg = batched_degrees_ref(adj, masks)
+    assert (jnp.take_along_axis(deg, u1[:, None], 1)[:, 0] == d2).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_random(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 200))
+    T = int(rng.integers(2, 20))
+    g = erdos_renyi(n, float(rng.uniform(0.02, 0.3)), seed)
+    masks = jnp.asarray(_random_masks(n, g.W, T, seed + 1))
+    got = degrees_op(jnp.asarray(g.adj), masks)
+    want = batched_degrees_ref(jnp.asarray(g.adj), masks)
+    assert (got == want).all()

