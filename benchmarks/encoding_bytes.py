@@ -6,11 +6,19 @@ optimized = 2·W + 1 words      (n-bit mask of surviving vertices)
 The table shows why the centralized scheduler collapses under the basic
 encoding (every task crosses the wire twice) and why the optimized encoding
 is what makes the fixed-shape TPU port natural.
+
+The trailing columns extend the story to the SPMD data plane at P=64
+(EXPERIMENTS.md §Perf): the gather path all-gathers the full P-row record
+table every transfer round, while the sparse masked-psum path pays only for
+the records that actually matched (here m=1 match — the common case late in
+a run; 0 matches moves 0 bytes).
 """
 
 from __future__ import annotations
 
 from repro.core.encoding import make_codec
+
+P_REF = 64  # reference worker count for the per-round wire columns
 
 
 def run(csv=True):
@@ -24,6 +32,8 @@ def run(csv=True):
                 optimized_bytes=opt.record_bytes,
                 basic_bytes=bas.record_bytes,
                 ratio=round(bas.record_bytes / opt.record_bytes, 1),
+                gather_round_B_p64=P_REF * opt.record_bytes,
+                sparse_round_B_m1=opt.record_bytes,
             )
         )
     if csv:

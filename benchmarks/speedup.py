@@ -43,6 +43,36 @@ def rows(graph_name, g, workers_list):
     return out
 
 
+def donation_rows(graph_name, g, workers_list):
+    """SPMD engine: multi-task donation (``donate_k``) on a skewed tree —
+    a matched donor ships up to k shallowest tasks, so starved workers are
+    refilled in fewer rebalance rounds (tasks moved per transfer round)."""
+    from repro.core.engine import solve
+
+    out = []
+    for p in workers_list:
+        base = None
+        for k in (1, 4):
+            r = solve(g, num_workers=p, steps_per_round=8, donate_k=k)
+            if base is None:
+                base = r.best_size
+            assert r.best_size == base
+            out.append(
+                dict(
+                    graph=graph_name,
+                    workers=p,
+                    donate_k=k,
+                    rounds=r.rounds,
+                    transfer_rounds=r.transfer_rounds,
+                    tasks_moved=r.tasks_transferred,
+                    tasks_per_transfer_round=round(
+                        r.tasks_transferred / max(r.transfer_rounds, 1), 2
+                    ),
+                )
+            )
+    return out
+
+
 def run(csv=True):
     results = []
     # hard instance: ~7.5k search nodes sequentially (the p_hat-like regime)
@@ -50,12 +80,18 @@ def run(csv=True):
     # easy instance: reductions solve it almost instantly — reproduces the
     # paper's DSJ500.5 finding that massive parallelism wastes work there
     results += rows("phat_48_easy", p_hat_like(48, 0.45, 1), [2, 8])
+    donation = donation_rows("gnp64_skewed", erdos_renyi(64, 0.22, 3), [8, 16])
     if csv:
         keys = list(results[0].keys())
         print(",".join(keys))
         for r in results:
             print(",".join(str(r[k]) for k in keys))
-    return results
+        print("# multi-task donation (SPMD engine)")
+        keys = list(donation[0].keys())
+        print(",".join(keys))
+        for r in donation:
+            print(",".join(str(r[k]) for k in keys))
+    return results + donation
 
 
 if __name__ == "__main__":

@@ -38,11 +38,22 @@ def main():
         print(f"{'centralized':<22}{codec:<12}{cent.ticks:<14}"
               f"{cent.stats.total_bytes:<12}{'-':<10}{'-':<7}")
 
-    r = solve(g, num_workers=8, steps_per_round=16)
-    assert r.best_size == best
-    print(f"\nSPMD engine: mvc={r.best_size}, {r.rounds} supersteps, "
-          f"{r.tasks_transferred} transfers, "
-          f"{r.control_bytes_per_round} control B/round")
+    # SPMD engine: both data-plane paths must agree bit-for-bit (the sparse
+    # masked-psum path moves only matched records; gather moves the full
+    # P-row table — see EXPERIMENTS.md §Perf)
+    spmd = {}
+    for impl in ("sparse", "gather"):
+        r = solve(g, num_workers=8, steps_per_round=16, transfer_impl=impl)
+        assert r.best_size == best
+        spmd[impl] = r
+        print(f"\nSPMD engine [{impl:>6}]: mvc={r.best_size}, "
+              f"{r.rounds} supersteps, {r.tasks_transferred} transfers, "
+              f"{r.control_bytes_per_round} control B/round, "
+              f"{r.transfer_bytes_per_round:.1f} payload B/round")
+    a, b = spmd["sparse"], spmd["gather"]
+    assert a.best_size == b.best_size and (a.best_sol == b.best_sol).all()
+    print("transfer paths bit-identical; sparse payload "
+          f"{a.transfer_bytes_total}B vs gather {b.transfer_bytes_total}B")
 
 
 if __name__ == "__main__":

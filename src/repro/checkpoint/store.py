@@ -4,8 +4,11 @@ Layout:  <dir>/step_<N>/  arrays.npz  (flattened pytree leaves)
                           manifest.msgpack  (treedef paths, shapes, dtypes,
                                              step, data-pipeline state)
 
-* **atomic**: written to ``step_<N>.tmp`` then renamed — a crash mid-write
-  never corrupts the latest checkpoint (restart resumes from the previous);
+* **atomic**: written to a UNIQUE ``step_<N>.<rand>.tmp`` dir then swapped
+  into place under a process-wide lock — a crash mid-write never corrupts
+  the latest checkpoint, and concurrent writers of the same step (e.g. an
+  async save racing a final blocking save) are last-writer-wins instead of
+  colliding on a shared tmp path;
 * **mesh-agnostic**: leaves are saved unsharded (device_get) and restored
   with ``jax.device_put(leaf, sharding)`` against whatever mesh the restart
   runs on — re-meshing on restart is how elastic scale-up/down works;
@@ -18,6 +21,7 @@ from __future__ import annotations
 
 import os
 import shutil
+import tempfile
 import threading
 from typing import Any, Optional
 
@@ -26,6 +30,13 @@ import msgpack
 import numpy as np
 
 _PENDING: list[threading.Thread] = []
+# Serializes the final tmp->step_<N> swap across writer threads; the bulk
+# np.savez I/O stays outside the lock so async saves still overlap compute.
+_SWAP_LOCK = threading.Lock()
+# Process umask, read once at import (before writer threads exist — the
+# os.umask read is a racy set/restore).
+_UMASK = os.umask(0)
+os.umask(_UMASK)
 
 
 def _flatten(tree) -> tuple[list[tuple[str, np.ndarray]], Any]:
@@ -53,16 +64,26 @@ def save_checkpoint(
     def write():
         os.makedirs(directory, exist_ok=True)
         final = os.path.join(directory, f"step_{step}")
-        tmp = final + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "arrays.npz"), **payload)
-        with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
-            f.write(msgpack.packb(meta))
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
+        # Unique tmp dir per writer: concurrent saves of the same step never
+        # share a path (the old fixed ``step_<N>.tmp`` raced with itself).
+        tmp = tempfile.mkdtemp(
+            prefix=f"step_{step}.", suffix=".tmp", dir=directory
+        )
+        # mkdtemp creates 0700; restore umask-default perms so the renamed
+        # step_<N> dir stays readable by other users/services (as the old
+        # os.makedirs-based writer left it)
+        os.chmod(tmp, 0o777 & ~_UMASK)
+        try:
+            np.savez(os.path.join(tmp, "arrays.npz"), **payload)
+            with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+                f.write(msgpack.packb(meta))
+            with _SWAP_LOCK:
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
 
     if blocking:
         write()

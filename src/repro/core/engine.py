@@ -5,12 +5,18 @@ Responsibilities (the paper's startup/termination bookkeeping):
 * **startup** (§3.5): expand the root on the host until ≥ P open tasks exist
   (BFS = the equitable split), order them by the Algorithm-7 waiting-list
   traversal, and scatter one task per worker (the paper's seed→waiting-list
-  topology);
-* **rounds**: call the jitted superstep until it reports global quiescence
-  (or, in FPT mode, until the global best reaches k);
+  topology); overflow tasks (BFS can over-expand past P) are routed through
+  the SAME Algorithm-7 permutation so the equitable topology is preserved;
+* **rounds**: the solve loop is device-resident — ``build_chunk_fn`` runs up
+  to ``chunk_rounds`` supersteps per ``lax.while_loop`` on device, checking
+  global quiescence (and, in FPT mode, the bound ``k``) on device; the host
+  syncs ONE (done, ran) scalar pair per chunk instead of blocking on a
+  ``device_get`` after every superstep (see EXPERIMENTS.md §Perf);
 * **collect**: the center "knows which worker holds the best solution and
   fetches it only when the exploration has finished" (§3.1) — we argmin the
-  per-worker local bests once, at the end;
+  per-worker local bests once, at the end; all stats (nodes, transfers,
+  payload bytes) live in the carried ``WorkerState``, so collection is one
+  host fetch;
 * **elasticity / fault tolerance**: state is a plain pytree keyed only by
   (P, capacity, W).  ``snapshot``/``restore`` round-trip it through host
   memory; ``resize`` re-splits all pending tasks across a NEW worker count,
@@ -29,7 +35,7 @@ import numpy as np
 
 from repro.core.superstep import (
     WorkerState,
-    build_superstep_fn,
+    build_chunk_fn,
     make_worker_state,
 )
 from repro.core.waiting_list import startup_assignment
@@ -47,23 +53,41 @@ class EngineResult:
     tasks_transferred: int
     wall_s: float
     overflow: bool
-    # collective-traffic accounting (bytes) for the roofline / paper §4.3
+    # collective-traffic accounting (bytes) for the roofline / paper §4.3.
+    # Control plane is a static per-round budget; the data plane is counted
+    # on device: `transfer_rounds` supersteps ran the transfer collective and
+    # carried `transfer_bytes_total` bytes of task-record payload (sparse
+    # path: exactly 4·rec_words·records_moved — zero on no-match rounds;
+    # gather path: the full P·k record table per transfer round).  This is
+    # INFORMATION payload — the nonzero rows of the collective operand —
+    # not physical wire traffic: the sparse psum's static operand is still
+    # (P, k, REC) per device (see EXPERIMENTS.md §Perf B/C).
     control_bytes_per_round: int
-    transfer_bytes_per_round: int
+    transfer_rounds: int
+    transfer_bytes_total: int
+    transfer_bytes_per_round: float
 
 
 def _scatter_startup(
-    state: WorkerState, g: BitGraph, num_workers: int
+    state: WorkerState, g: BitGraph, num_workers: int, tasks=None
 ) -> WorkerState:
-    """BFS-split the root into ~P tasks and place them per Algorithm 7 order."""
-    tasks = expand_frontier(g, num_tasks=num_workers)
+    """BFS-split the root into ~P tasks and place them per Algorithm 7 order.
+
+    Every task — including overflow beyond the first ``num_workers`` when the
+    BFS split over-expands (``tasks`` may hold more than P records) — goes
+    through the same ``order`` permutation, so task i lands on worker
+    ``order[i mod P]``: the §3.5 equitable topology wraps instead of
+    degrading to raw round-robin.
+    """
+    if tasks is None:
+        tasks = expand_frontier(g, num_tasks=num_workers)
     order = startup_assignment(max_b=2, p=num_workers)  # 1-based worker ids
     masks = np.array(state.frontier.masks)
     sols = np.array(state.frontier.sols)
     depths = np.array(state.frontier.depths)
     active = np.array(state.frontier.active)
     for i, (mask, sol, depth) in enumerate(tasks):
-        w = (order[i % num_workers] - 1) if i < num_workers else (i % num_workers)
+        w = order[i % num_workers] - 1
         # next free slot on worker w
         slot = int(np.argmin(active[w]))
         assert not active[w, slot], "startup overflow"
@@ -91,6 +115,9 @@ def solve(
     codec: str = "optimized",
     packed_status: bool = True,
     skip_empty_transfer: bool = True,
+    transfer_impl: str = "sparse",
+    donate_k: int = 1,
+    chunk_rounds: int = 16,
     mode: str = "bnb",
     k: Optional[int] = None,
     mesh=None,
@@ -98,7 +125,15 @@ def solve(
     capacity: Optional[int] = None,
     initial_state: Optional[WorkerState] = None,
 ) -> EngineResult:
-    """Solve minimum vertex cover with P workers (virtual or one-per-device)."""
+    """Solve minimum vertex cover with P workers (virtual or one-per-device).
+
+    ``chunk_rounds`` supersteps run per host sync (device-resident while
+    loop); ``chunk_rounds=1`` reproduces the old per-round host loop for A/B
+    benchmarking.  ``transfer_impl``/``donate_k`` select the data-plane path
+    (see :func:`repro.core.superstep.superstep`).  ``max_rounds`` is a safety
+    valve, enforced at chunk granularity (the run may overshoot it by at most
+    ``chunk_rounds - 1`` supersteps).
+    """
     W = n_words(g.n)
     cap = capacity or (4 * g.n + 8 * lanes)
     initial_best = g.n + 1 if mode == "bnb" else (k + 1)
@@ -113,7 +148,7 @@ def solve(
     else:
         state = initial_state
 
-    step_fn = build_superstep_fn(
+    chunk_fn = build_chunk_fn(
         problem,
         num_workers=num_workers,
         steps_per_round=steps_per_round,
@@ -122,17 +157,20 @@ def solve(
         transfer_pad_words=pad,
         packed_status=packed_status,
         skip_empty_transfer=skip_empty_transfer,
+        transfer_impl=transfer_impl,
+        donate_k=donate_k,
+        chunk_rounds=chunk_rounds,
+        fpt_bound=(k if mode == "fpt" else None),
         mesh=mesh,
     )
 
     t0 = time.perf_counter()
     rounds = 0
     while rounds < max_rounds:
-        state, done = step_fn(state)
-        rounds += 1
-        if bool(jax.device_get(done)):
-            break
-        if mode == "fpt" and int(jax.device_get(state.best_val.min())) <= k:
+        state, done, ran = chunk_fn(state)
+        done, ran = jax.device_get((done, ran))
+        rounds += int(ran)
+        if bool(done):
             break
     wall = time.perf_counter() - t0
 
@@ -145,7 +183,10 @@ def solve(
     if best_size > g.n:
         best_sol = None
 
-    rec_words = 2 * W + 1 + pad
+    # payload_words/transfer_rounds are replicated (derived from the shared
+    # status table), so worker 0's view is the global truth.
+    payload_words = int(np.asarray(state.payload_words)[0])
+    transfer_rounds = int(np.asarray(state.transfer_rounds)[0])
     return EngineResult(
         best_size=best_size,
         best_sol=best_sol,
@@ -155,9 +196,9 @@ def solve(
         wall_s=wall,
         overflow=bool(np.asarray(state.frontier.overflow).any()),
         control_bytes_per_round=4 * (1 if packed_status else 3) * num_workers,
-        transfer_bytes_per_round=4 * rec_words * num_workers,
-        # (all-gather reference path; see EXPERIMENTS.md §Perf for the
-        #  masked-psum alternative that moves only matched records)
+        transfer_rounds=transfer_rounds,
+        transfer_bytes_total=4 * payload_words,
+        transfer_bytes_per_round=4 * payload_words / max(rounds, 1),
     )
 
 

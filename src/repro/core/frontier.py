@@ -89,6 +89,38 @@ def pop_shallowest(f: Frontier):
     )
 
 
+def pop_k_shallowest(f: Frontier, count: int, limit=None):
+    """Pop up to ``count`` shallowest tasks (multi-task donation, the batched
+    Alg. 6): a donor with a deep frontier fills a starved worker with several
+    quasi-horizontal tasks in ONE rebalance round.
+
+    ``limit`` (dynamic, () int32) caps how many of the ``count`` candidates
+    are actually removed — the engine passes ``min(k, pending - 1)`` so a
+    donor always keeps at least one task (the paper's failure-free rule).
+
+    Returns (frontier, masks (count, W), sols (count, W), depths (count,),
+    valid (count,) bool) with tasks ordered shallowest-first; ``valid`` marks
+    the entries that were really popped.
+    """
+    key = jnp.where(f.active, f.depths, BIG_DEPTH)
+    # top_k of the negated key = the ``count`` smallest depths, in order.
+    _, slots = jax.lax.top_k(-key, count)
+    valid = f.active[slots]
+    if limit is not None:
+        valid = valid & (jnp.arange(count) < limit)
+    # slots from top_k are unique; keep rows beyond ``limit`` active.
+    new_active = f.active.at[slots].set(
+        jnp.where(valid, False, f.active[slots])
+    )
+    return (
+        f._replace(active=new_active),
+        f.masks[slots],
+        f.sols[slots],
+        f.depths[slots],
+        valid,
+    )
+
+
 def push_many(f: Frontier, masks, sols, depths, valid):
     """Push up to K tasks (valid flags mark real ones).
 

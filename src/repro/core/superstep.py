@@ -11,14 +11,25 @@ One superstep =
   3. **replicated center** — every worker deterministically computes the same
      idle→donor matching from the table (`getNextWorkingNode` over RUNNING
      workers; priority = shallowest pending task, or round-robin "random");
-  4. **data plane** — matched donors pop their *shallowest* task (Alg. 6) and
-     the fixed-size record moves to the idle worker (reference path:
-     all-gather + select; see §Perf in EXPERIMENTS.md for the alternatives);
+  4. **data plane** — matched donors pop up to ``donate_k`` of their
+     *shallowest* tasks (Alg. 6, batched) and the fixed-size records move to
+     the idle worker.  Two implementations (§Perf in EXPERIMENTS.md):
+
+       ``transfer_impl="sparse"`` (default) — each donor scatters its record
+       block into a zero (P, k, REC) buffer addressed by ``send_to`` and ONE
+       ``psum`` delivers it; rows for unmatched workers are zero, so the
+       payload actually carrying tasks scales with ``n_match`` (and the
+       whole collective is skipped on match-free rounds — zero bytes);
+
+       ``transfer_impl="gather"`` — the all-gather + select reference path
+       kept for A/B benchmarking: every transfer round moves the full
+       (P, k, REC) table regardless of how few records matched;
   5. **best-value broadcast** — global best = min over workers (the paper's
      ``bestval_update`` verify-then-broadcast collapses to one pmin).
 
 Failure-free guarantee (paper §3.1): the matcher only pairs an idle worker
-with a donor whose ``pending >= 2``, and in BSP the transfer completes inside
+with a donor whose ``pending >= 2``, donors keep at least one task
+(``donated = min(k, pending - 1)``), and in BSP the transfer completes inside
 the same superstep — a matched idle worker ALWAYS receives a task, no retries.
 
 Termination (paper §3.3): transfers cannot straddle a superstep boundary, so
@@ -27,26 +38,28 @@ sent/ack counting and timeout safety mechanisms of the MPI implementation are
 subsumed by the BSP barrier.
 
 The same function runs under ``jax.vmap(axis_name=...)`` (P virtual workers
-on one device — used by tests) and ``jax.shard_map`` (one worker per mesh
-device — used by the launcher and the multi-pod dry-run).
+on one device — used by tests) and shard_map (one worker per mesh device —
+used by the launcher and the multi-pod dry-run).  ``build_chunk_fn`` wraps
+either path in a device-resident ``lax.while_loop`` that runs up to K
+supersteps per host sync, checking quiescence (and the FPT bound) on device —
+the host only syncs once per chunk, so round latency is hardware-bound, not
+host-dispatch-bound.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.frontier import (
-    BIG_DEPTH,
     Frontier,
     make_frontier,
     pop_deepest,
-    pop_shallowest,
+    pop_k_shallowest,
     push_many,
-    push_one,
 )
 from repro.problems.vertex_cover import (
     VCProblem,
@@ -55,6 +68,24 @@ from repro.problems.vertex_cover import (
     lower_bound,
     popcount,
 )
+
+
+def _shard_map(body, *, mesh, in_specs, out_specs):
+    """shard_map across jax versions (top-level on newer, experimental on
+    0.4.x).  The 0.4.x replication checker has no rule for ``while`` — the
+    chunked runner's device-resident loop — so replication checking is
+    disabled where the kwarg exists.  Kept local so :mod:`repro.core` stays
+    launch-independent."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+    try:
+        return fn(
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )
+    except TypeError:  # newer jax renamed/removed check_rep
+        return fn(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
 
 
 class WorkerState(NamedTuple):
@@ -66,6 +97,10 @@ class WorkerState(NamedTuple):
     tasks_sent: jnp.ndarray  # () int32
     tasks_recv: jnp.ndarray  # () int32
     rounds: jnp.ndarray  # () int32
+    # collective-traffic accounting, carried ON DEVICE so the chunked runner
+    # never has to sync for stats (replicated: same value on every worker)
+    transfer_rounds: jnp.ndarray  # () int32 -- rounds that ran the data plane
+    payload_words: jnp.ndarray  # () int32 -- u32 words moved by the data plane
 
 
 def make_worker_state(capacity: int, W: int, initial_best: int) -> WorkerState:
@@ -79,6 +114,8 @@ def make_worker_state(capacity: int, W: int, initial_best: int) -> WorkerState:
         tasks_sent=z,
         tasks_recv=z,
         rounds=z,
+        transfer_rounds=z,
+        payload_words=z,
     )
 
 
@@ -212,6 +249,8 @@ def superstep(
     transfer_pad_words: int = 0,
     packed_status: bool = True,
     skip_empty_transfer: bool = True,
+    transfer_impl: str = "sparse",
+    donate_k: int = 1,
 ):
     """One BSP round for a single worker (replicated via vmap/shard_map).
 
@@ -224,13 +263,29 @@ def superstep(
       packed_status       — (pending, top_depth) bit-packed into ONE i32 per
                             worker (+ a scalar pmin for the bound) instead of
                             a 3-int row: the control-plane gather shrinks 3x.
-      skip_empty_transfer — the record all-gather runs under a cond that every
-                            worker evaluates identically from the replicated
-                            table; rounds with no match move ZERO payload.
+      skip_empty_transfer — the data-plane collective runs under a cond that
+                            every worker evaluates identically from the
+                            replicated table; rounds with no match move ZERO
+                            payload.
+      transfer_impl       — "sparse": donors scatter their record block into a
+                            zero (P, k, REC) buffer by ``send_to`` and one
+                            psum delivers it (payload records == matches);
+                            "gather": all-gather + select reference path
+                            (payload == the full P·k record table).
+      donate_k            — a matched donor sends up to ``donate_k`` of its
+                            shallowest tasks (always keeping one), filling a
+                            starved worker in one rebalance round.
 
     Returns (state, done) where done is the exact global quiescence flag.
     """
+    if transfer_impl not in ("sparse", "gather"):
+        raise ValueError(f"unknown transfer_impl: {transfer_impl!r}")
+    if donate_k < 1:
+        # a matched donor must ship at least one task, or the failure-free
+        # guarantee (a matched idle worker ALWAYS receives work) breaks
+        raise ValueError(f"donate_k must be >= 1, got {donate_k}")
     W = state.best_sol.shape[0]
+    rec_words = 2 * W + 1 + transfer_pad_words
 
     # 1. explore
     state = explore_phase(problem, state, steps_per_round, lanes)
@@ -257,45 +312,71 @@ def superstep(
     state = state._replace(best_val=global_best)
 
     # 3. replicated center matching
+    P = pend_t.shape[0]
     me = jax.lax.axis_index(axis_name).astype(jnp.int32)
     send_to, recv_from = match_idle_to_donors(
         pend_t, depth_t, policy_priority, state.rounds
     )
     n_match = (send_to >= 0).sum()
+    # records each donor actually ships (>=1 when matched: pending >= 2);
+    # replicated, so donor AND receiver count the block identically.
+    n_don = jnp.where(
+        send_to >= 0,
+        jnp.minimum(jnp.int32(donate_k), pend_t - 1),
+        jnp.int32(0),
+    )  # (P,)
 
-    # 4. data plane: donor pops shallowest; record = (mask, sol, depth[, pad])
+    # 4. data plane: donor pops its shallowest block; record row =
+    #    (mask, sol, depth[, pad])
     def do_transfer(state):
-        i_send = send_to[me] >= 0
-        f2, d_mask, d_sol, d_depth, d_valid = pop_shallowest(state.frontier)
-        do_send = i_send & d_valid  # guaranteed by pending>=2, but be safe
-        new_frontier = jax.tree.map(
-            lambda a, b: jnp.where(do_send, a, b), f2, state.frontier
+        f2, d_masks, d_sols, d_depths, d_valid = pop_k_shallowest(
+            state.frontier, donate_k, limit=n_don[me]
         )
         record = jnp.concatenate(
-            [d_mask, d_sol, d_depth[None].astype(jnp.uint32)]
+            [d_masks, d_sols, d_depths[:, None].astype(jnp.uint32)], axis=1
         )
         if transfer_pad_words:
             record = jnp.concatenate(
-                [record, jnp.zeros((transfer_pad_words,), jnp.uint32)]
+                [record, jnp.zeros((donate_k, transfer_pad_words), jnp.uint32)],
+                axis=1,
             )
-        record = jnp.where(do_send, record, 0)
+        record = jnp.where(d_valid[:, None], record, jnp.uint32(0))
 
-        # reference path: all-gather the records, select my donor's row
-        all_records = jax.lax.all_gather(record, axis_name)  # (P, REC)
         my_src = recv_from[me]
         i_recv = my_src >= 0
-        got = all_records[jnp.clip(my_src, 0, all_records.shape[0] - 1)]
-        new_frontier = push_one(
-            new_frontier,
-            got[:W],
-            got[W : 2 * W],
-            got[2 * W].astype(jnp.int32),
-            i_recv,
+        if transfer_impl == "gather":
+            # reference path: all-gather the full record table (indexed by
+            # DONOR), select my donor's block
+            all_records = jax.lax.all_gather(record, axis_name)  # (P, k, REC)
+            got = all_records[jnp.clip(my_src, 0, P - 1)]  # (k, REC)
+            moved_words = jnp.int32(P * donate_k * rec_words)
+        else:
+            # sparse path: scatter my block into the row my RECEIVER owns;
+            # one psum delivers every matched block at once (unmatched rows
+            # stay zero — the payload is exactly the matched records), and
+            # each receiver reads its own row.
+            buf = jnp.zeros((P, donate_k, rec_words), jnp.uint32)
+            tgt = jnp.where(send_to[me] >= 0, send_to[me], jnp.int32(P))
+            buf = buf.at[tgt].set(record, mode="drop")
+            delivered = jax.lax.psum(buf, axis_name)  # (P, k, REC)
+            got = delivered[me]  # (k, REC)
+            moved_words = n_don.sum() * rec_words
+        recv_valid = i_recv & (
+            jnp.arange(donate_k) < n_don[jnp.clip(my_src, 0, P - 1)]
+        )
+        new_frontier = push_many(
+            f2,
+            got[:, :W],
+            got[:, W : 2 * W],
+            got[:, 2 * W].astype(jnp.int32),
+            recv_valid,
         )
         return state._replace(
             frontier=new_frontier,
-            tasks_sent=state.tasks_sent + do_send.astype(jnp.int32),
-            tasks_recv=state.tasks_recv + i_recv.astype(jnp.int32),
+            tasks_sent=state.tasks_sent + n_don[me],
+            tasks_recv=state.tasks_recv + recv_valid.sum().astype(jnp.int32),
+            transfer_rounds=state.transfer_rounds + 1,
+            payload_words=state.payload_words + moved_words,
         )
 
     if skip_empty_transfer:
@@ -322,6 +403,8 @@ def build_superstep_fn(
     transfer_pad_words: int = 0,
     packed_status: bool = True,
     skip_empty_transfer: bool = True,
+    transfer_impl: str = "sparse",
+    donate_k: int = 1,
     mesh=None,
     axis_name: str = "workers",
 ):
@@ -330,6 +413,9 @@ def build_superstep_fn(
     mesh=None  -> vmap over the leading axis (P virtual workers, one device).
     mesh given -> shard_map over the mesh axis ``axis_name`` (one worker per
                   device; state leading axis must equal mesh size).
+
+    One host sync per superstep — prefer :func:`build_chunk_fn` for solve
+    loops; this remains the single-round entry point for tests/benchmarks.
     """
     step = functools.partial(
         superstep,
@@ -341,6 +427,8 @@ def build_superstep_fn(
         transfer_pad_words=transfer_pad_words,
         packed_status=packed_status,
         skip_empty_transfer=skip_empty_transfer,
+        transfer_impl=transfer_impl,
+        donate_k=donate_k,
     )
     if mesh is None:
         vstep = jax.vmap(step, axis_name=axis_name)
@@ -362,5 +450,103 @@ def build_superstep_fn(
         return jax.tree.map(lambda x: x[None], state), done
 
     return jax.jit(
-        jax.shard_map(body, mesh=mesh, in_specs=(spec,), out_specs=(spec, P()))
+        _shard_map(body, mesh=mesh, in_specs=(spec,), out_specs=(spec, P()))
+    )
+
+
+def build_chunk_fn(
+    problem: VCProblem,
+    *,
+    num_workers: int,
+    steps_per_round: int,
+    lanes: int,
+    policy_priority: bool = True,
+    transfer_pad_words: int = 0,
+    packed_status: bool = True,
+    skip_empty_transfer: bool = True,
+    transfer_impl: str = "sparse",
+    donate_k: int = 1,
+    chunk_rounds: int = 16,
+    fpt_bound: Optional[int] = None,
+    mesh=None,
+    axis_name: str = "workers",
+):
+    """Device-resident multi-round runner: ``state -> (state, done, ran)``.
+
+    Runs up to ``chunk_rounds`` supersteps inside ONE ``lax.while_loop`` on
+    device, exiting early on exact global quiescence or (FPT mode) when the
+    global best reaches ``fpt_bound``.  The host syncs once per call instead
+    of once per round — the BSP cadence is set by the hardware, not by host
+    dispatch latency.  ``ran`` is the number of supersteps executed (< K only
+    when the run finished mid-chunk).
+
+    vmap path: the while_loop wraps the vmapped superstep, predicate =
+    all-workers quiescence.  shard_map path: the while_loop runs INSIDE the
+    per-device body — the quiescence flag is already replicated by the psum
+    in the superstep, so every device takes the same branch.
+    """
+    if chunk_rounds < 1:
+        # 0 would return (state, done=False, ran=0) forever: the caller's
+        # progress counter never advances and its solve loop cannot exit
+        raise ValueError(f"chunk_rounds must be >= 1, got {chunk_rounds}")
+    step = functools.partial(
+        superstep,
+        problem,
+        axis_name=axis_name,
+        steps_per_round=steps_per_round,
+        lanes=lanes,
+        policy_priority=policy_priority,
+        transfer_pad_words=transfer_pad_words,
+        packed_status=packed_status,
+        skip_empty_transfer=skip_empty_transfer,
+        transfer_impl=transfer_impl,
+        donate_k=donate_k,
+    )
+
+    def cond(carry):
+        _, done, i = carry
+        return jnp.logical_not(done) & (i < chunk_rounds)
+
+    if mesh is None:
+        vstep = jax.vmap(step, axis_name=axis_name)
+
+        def body(carry):
+            state, _, i = carry
+            state, done = vstep(state)
+            done = done.all()
+            if fpt_bound is not None:
+                done = done | (state.best_val.min() <= fpt_bound)
+            return state, done, i + 1
+
+        def run(state):
+            return jax.lax.while_loop(
+                cond, body, (state, jnp.bool_(False), jnp.int32(0))
+            )
+
+        return jax.jit(run)
+
+    from jax.sharding import PartitionSpec as P
+
+    spec = P(axis_name)
+
+    def block(state_block):
+        state0 = jax.tree.map(lambda x: x[0], state_block)
+
+        def body(carry):
+            state, _, i = carry
+            state, done = step(state)
+            if fpt_bound is not None:
+                # best_val is the global min after the pmin phase: replicated
+                done = done | (state.best_val <= fpt_bound)
+            return state, done, i + 1
+
+        state, done, i = jax.lax.while_loop(
+            cond, body, (state0, jnp.bool_(False), jnp.int32(0))
+        )
+        return jax.tree.map(lambda x: x[None], state), done, i
+
+    return jax.jit(
+        _shard_map(
+            block, mesh=mesh, in_specs=(spec,), out_specs=(spec, P(), P())
+        )
     )

@@ -7,8 +7,12 @@ superstep engine lowered with one worker per device on a 512-chip mesh.
 
 Reports the same roofline terms as the LM cells, for the baseline engine
 (3-int status rows, unconditional record all-gather — the straight port of
-the protocol) and the optimized engine (bit-packed 1-int status + pmin bound,
-record all-gather skipped on match-free rounds) — §Perf cell C.
+the protocol), the optimized control plane (bit-packed 1-int status + pmin
+bound, data plane skipped on match-free rounds) and the sparse data plane
+(masked-psum transfer: payload rows carry only matched records) — §Perf
+cell C of EXPERIMENTS.md.  ``--chunked`` lowers the K-round device-resident
+runner instead of a single superstep (the shape the production launcher
+runs: one host sync per chunk).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun_solver [--n 1024] [--out f.json]
@@ -20,32 +24,40 @@ import json
 import jax
 import jax.numpy as jnp
 
-from repro.core.superstep import build_superstep_fn, make_worker_state
+from repro.core.superstep import (
+    build_chunk_fn,
+    build_superstep_fn,
+    make_worker_state,
+)
 from repro.graphs.bitgraph import n_words
 from repro.graphs.generators import erdos_renyi
 from repro.launch.analysis import collective_bytes, roofline
+from repro.launch.mesh import make_mesh_compat
 from repro.problems.vertex_cover import make_problem
 
 
 def lower_engine(n: int, workers: int, *, packed_status, skip_empty_transfer,
-                 steps_per_round=32, lanes=1, codec_pad=0):
-    mesh = jax.make_mesh(
-        (workers,), ("workers",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+                 transfer_impl="gather", steps_per_round=32, lanes=1,
+                 codec_pad=0, chunked=False, chunk_rounds=16):
+    mesh = make_mesh_compat((workers,), ("workers",))
     g = erdos_renyi(n, 4.0 / (n - 1), 0)
     problem = make_problem(jnp.asarray(g.adj), g.n)
     W = n_words(n)
     cap = 4 * n + 8 * lanes
-    fn = build_superstep_fn(
-        problem,
+    kwargs = dict(
         num_workers=workers,
         steps_per_round=steps_per_round,
         lanes=lanes,
         transfer_pad_words=codec_pad,
         packed_status=packed_status,
         skip_empty_transfer=skip_empty_transfer,
+        transfer_impl=transfer_impl,
         mesh=mesh,
     )
+    if chunked:
+        fn = build_chunk_fn(problem, chunk_rounds=chunk_rounds, **kwargs)
+    else:
+        fn = build_superstep_fn(problem, **kwargs)
     state = jax.eval_shape(
         lambda: jax.vmap(lambda _: make_worker_state(cap, W, n + 1))(
             jnp.arange(workers)
@@ -54,6 +66,8 @@ def lower_engine(n: int, workers: int, *, packed_status, skip_empty_transfer,
     lowered = fn.lower(state)
     compiled = lowered.compile()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax 0.4.x: one dict per device
+        cost = cost[0] if cost else {}
     coll = collective_bytes(compiled.as_text())
     mem = compiled.memory_analysis()
     flops = float(cost.get("flops", 0.0))
@@ -63,6 +77,8 @@ def lower_engine(n: int, workers: int, *, packed_status, skip_empty_transfer,
         "workers": workers,
         "packed_status": packed_status,
         "skip_empty_transfer": skip_empty_transfer,
+        "transfer_impl": transfer_impl,
+        "chunked": chunked,
         "flops_per_dev": flops,
         "collectives": {k: v for k, v in coll.items() if k != "counts"},
         "collective_counts": coll["counts"],
@@ -76,15 +92,21 @@ def main():
     ap.add_argument("--n", type=int, default=1024)
     ap.add_argument("--workers", type=int, default=512)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--chunked", action="store_true",
+                    help="lower the K-round device-resident runner")
+    ap.add_argument("--chunk-rounds", type=int, default=16)
     args = ap.parse_args()
     results = []
-    for packed, skip, label in [
-        (False, False, "baseline (3-int status, unconditional transfer)"),
-        (True, False, "packed status word"),
-        (True, True, "packed + skip-empty-transfer"),
+    for packed, skip, impl, label in [
+        (False, False, "gather", "baseline (3-int status, unconditional gather)"),
+        (True, False, "gather", "packed status word"),
+        (True, True, "gather", "packed + skip-empty-transfer"),
+        (True, True, "sparse", "packed + skip-empty + sparse psum transfer"),
     ]:
         r = lower_engine(
-            args.n, args.workers, packed_status=packed, skip_empty_transfer=skip
+            args.n, args.workers, packed_status=packed,
+            skip_empty_transfer=skip, transfer_impl=impl,
+            chunked=args.chunked, chunk_rounds=args.chunk_rounds,
         )
         r["label"] = label
         results.append(r)

@@ -49,6 +49,12 @@ def main():
     ap.add_argument("--policy", default="priority", choices=["priority", "random"])
     ap.add_argument("--steps-per-round", type=int, default=32)
     ap.add_argument("--lanes", type=int, default=1)
+    ap.add_argument("--transfer", default="sparse", choices=["sparse", "gather"],
+                    help="data-plane impl (sparse=masked psum, gather=all-gather)")
+    ap.add_argument("--donate-k", type=int, default=1,
+                    help="max tasks a matched donor ships per round")
+    ap.add_argument("--chunk-rounds", type=int, default=16,
+                    help="supersteps per host sync (device-resident loop)")
     ap.add_argument("--use-mesh", action="store_true",
                     help="one worker per jax device (shard_map)")
     ap.add_argument("--mode", default="bnb", choices=["bnb", "fpt"])
@@ -113,6 +119,9 @@ def main():
         lanes=args.lanes,
         policy_priority=(args.policy == "priority"),
         codec=args.codec,
+        transfer_impl=args.transfer,
+        donate_k=args.donate_k,
+        chunk_rounds=args.chunk_rounds,
         mode=args.mode,
         k=args.k,
         mesh=mesh,
@@ -122,7 +131,9 @@ def main():
         f"nodes={res.nodes_expanded} transfers={res.tasks_transferred} "
         f"overflow={res.overflow} wall={res.wall_s:.2f}s "
         f"control_B/round={res.control_bytes_per_round} "
-        f"transfer_B/round={res.transfer_bytes_per_round}"
+        f"transfer_B/round={res.transfer_bytes_per_round:.1f} "
+        f"(total {res.transfer_bytes_total}B over "
+        f"{res.transfer_rounds} transfer rounds, {args.transfer})"
     )
 
 

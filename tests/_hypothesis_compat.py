@@ -1,0 +1,98 @@
+"""Hypothesis, or a deterministic stand-in when it is not installed.
+
+Tier-1 must be green on a bare interpreter (the container does not ship
+``hypothesis``).  When the real library is importable we re-export it
+unchanged; otherwise a minimal fallback provides the subset of the API the
+test suite uses — ``given``, ``settings`` and the ``integers`` / ``lists`` /
+``sampled_from`` / ``one_of`` / ``tuples`` / ``just`` strategies — driving
+each property with ``max_examples`` pseudo-random examples drawn from a PRNG
+seeded by the test name, so failures reproduce exactly across runs.
+
+The fallback does no shrinking and no example database; it is an example
+generator, not a property-based testing engine.  Install the pinned
+``requirements-dev.txt`` to get real hypothesis back.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A sampler: ``draw(rng) -> value``."""
+
+        def __init__(self, draw):
+            self.draw = draw
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda r: value)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+        @staticmethod
+        def one_of(*strats):
+            return _Strategy(lambda r: r.choice(strats).draw(r))
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(lambda r: tuple(s.draw(r) for s in strats))
+
+        @staticmethod
+        def lists(elements, *, min_size=0, max_size=10):
+            def draw(r):
+                k = r.randint(min_size, max_size)
+                return [elements.draw(r) for _ in range(k)]
+
+            return _Strategy(draw)
+
+    def settings(*, max_examples=20, deadline=None, **_kwargs):
+        """Record ``max_examples`` on the decorated test (deadline ignored)."""
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples", 20)
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+                for i in range(n):
+                    example = tuple(s.draw(rng) for s in strats)
+                    try:
+                        fn(*args, *example, **kwargs)
+                    except Exception as e:  # re-raise with the failing example
+                        raise AssertionError(
+                            f"falsifying example #{i}: {example!r}"
+                        ) from e
+
+            # Copy identity but NOT __wrapped__/signature: pytest must see a
+            # zero-argument test, exactly like real hypothesis's wrapper.
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__module__ = fn.__module__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._compat_max_examples = getattr(
+                fn, "_compat_max_examples", 20
+            )
+            return wrapper
+
+        return deco

@@ -1,7 +1,7 @@
 """Semi-centralized serving balancer: the paper's guarantees, restated."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.serving.balancer import BalancerState, RequestBatch, rebalance, simulate
 

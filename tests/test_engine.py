@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import engine as E
 from repro.core.superstep import build_superstep_fn, make_worker_state
@@ -75,12 +75,83 @@ def test_snapshot_restore_resize():
 def test_transfer_accounting():
     g = erdos_renyi(40, 0.28, 0)
     W = n_words(g.n)
-    r_opt = E.solve(g, num_workers=4, codec="optimized")
-    r_bas = E.solve(g, num_workers=4, codec="basic")
-    assert r_opt.transfer_bytes_per_round == 4 * (2 * W + 1) * 4
-    assert r_bas.transfer_bytes_per_round == 4 * ((g.n + 2) * W + 1) * 4
+    rec_opt = 2 * W + 1
+    rec_bas = (g.n + 2) * W + 1
+    # gather: every transfer round moves the full P-row record table
+    r_opt = E.solve(g, num_workers=4, codec="optimized", transfer_impl="gather")
+    r_bas = E.solve(g, num_workers=4, codec="basic", transfer_impl="gather")
+    assert r_opt.transfer_bytes_total == 4 * rec_opt * 4 * r_opt.transfer_rounds
+    assert r_bas.transfer_bytes_total == 4 * rec_bas * 4 * r_bas.transfer_rounds
+    # sparse: payload == exactly the records that matched (paper: the donated
+    # task is the sole payload), regardless of P
+    r_sp = E.solve(g, num_workers=4, codec="optimized", transfer_impl="sparse")
+    assert r_sp.transfer_bytes_total == 4 * rec_opt * r_sp.tasks_transferred
+    assert r_sp.transfer_bytes_total < r_opt.transfer_bytes_total
+    # rounds that ran no transfer move zero payload on either path
+    assert r_sp.transfer_rounds <= r_sp.rounds
     # the paper's point: control plane is O(P) integers regardless of codec —
     # ONE packed i32 per worker by default, three with packed_status=False
     assert r_opt.control_bytes_per_round == r_bas.control_bytes_per_round == 16
     r_unpacked = E.solve(g, num_workers=4, packed_status=False)
     assert r_unpacked.control_bytes_per_round == 48
+
+
+def test_chunked_loop_matches_per_round():
+    """K supersteps per host sync must be bit-identical to per-round syncs."""
+    g = erdos_renyi(40, 0.28, 0)
+    want, _, _ = solve_sequential(g)
+    r1 = E.solve(g, num_workers=6, steps_per_round=8, chunk_rounds=1)
+    rk = E.solve(g, num_workers=6, steps_per_round=8, chunk_rounds=32)
+    assert r1.best_size == rk.best_size == want
+    assert (r1.best_sol == rk.best_sol).all()
+    assert r1.rounds == rk.rounds
+    assert r1.nodes_expanded == rk.nodes_expanded
+
+
+def test_multi_task_donation():
+    g = erdos_renyi(44, 0.25, 4)
+    want, _, _ = solve_sequential(g)
+    r1 = E.solve(g, num_workers=8, steps_per_round=4, donate_k=1)
+    r4 = E.solve(g, num_workers=8, steps_per_round=4, donate_k=4)
+    assert r1.best_size == r4.best_size == want
+    assert not r4.overflow
+    # single-task donation ships exactly one record per match...
+    assert r1.tasks_transferred >= r1.transfer_rounds
+    # ...while k=4 actually exploits the batch (deep donors ship > 1/match)
+    assert r4.tasks_transferred > r4.transfer_rounds
+    assert (
+        r4.tasks_transferred / max(r4.transfer_rounds, 1)
+        > r1.tasks_transferred / max(r1.transfer_rounds, 1)
+    )
+
+
+def test_scatter_startup_overflow_uses_waiting_list_order():
+    """Regression: overflow tasks (i >= P when BFS over-expands) must follow
+    the same Algorithm-7 permutation as the first P, not raw i mod P."""
+    from repro.core.waiting_list import startup_assignment
+    from repro.problems.sequential import expand_frontier
+
+    g = erdos_renyi(40, 0.28, 0)
+    P = 6
+    W = n_words(g.n)
+    tasks = expand_frontier(g, num_tasks=2 * P + 3)  # BFS over-expansion
+    assert len(tasks) > P
+    state = jax.vmap(lambda _: make_worker_state(40, W, g.n + 1))(jnp.arange(P))
+    placed = E._scatter_startup(state, g, P, tasks=tasks)
+    order = startup_assignment(max_b=2, p=P)
+    want_counts = np.zeros(P, np.int64)
+    for i in range(len(tasks)):
+        want_counts[order[i % P] - 1] += 1
+    active = np.asarray(placed.frontier.active)
+    got_counts = active.sum(axis=1)
+    assert (got_counts == want_counts).all()
+    # every BFS task landed somewhere, none lost or duplicated
+    placed_recs = sorted(
+        np.asarray(placed.frontier.masks)[w, s].tobytes()
+        + np.asarray(placed.frontier.sols)[w, s].tobytes()
+        for w in range(P)
+        for s in range(active.shape[1])
+        if active[w, s]
+    )
+    want_recs = sorted(m.tobytes() + s.tobytes() for m, s, _ in tasks)
+    assert placed_recs == want_recs
