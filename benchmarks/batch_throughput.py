@@ -1,0 +1,83 @@
+"""Batched multi-instance solve plane: instances/sec vs a sequential loop.
+
+For B in {1, 4, 16}: B independent G(n, p) instances solved (a) by a loop of
+B single-instance ``engine.solve`` calls — the only option before the
+instance axis existed; each call builds and jits its own chunk executable and
+pays its own per-chunk host syncs — and (b) by ONE ``engine.solve_many``
+call, which packs the batch into padded (B, n, W) problem tensors behind a
+single compiled executable and one host sync per chunk for the whole batch.
+
+Per-instance ``best_size``/``best_sol`` are asserted bit-identical between
+the two paths (the batched plane is an amortization, not an approximation).
+
+``run(smoke=True)`` shrinks the instances for the CI bench-smoke job and the
+returned dict lands in BENCH_smoke.json (EXPERIMENTS.md §C tracks the
+full-size numbers).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import engine as E
+from repro.graphs.generators import erdos_renyi
+
+BATCH_SIZES = (1, 4, 16)
+
+
+def _bench_one(B: int, *, n: int, p: float, workers: int, spr: int) -> dict:
+    graphs = [erdos_renyi(n, p, seed) for seed in range(B)]
+
+    t0 = time.perf_counter()
+    singles = [
+        E.solve(g, num_workers=workers, steps_per_round=spr) for g in graphs
+    ]
+    seq_wall = time.perf_counter() - t0
+
+    batch = E.solve_many(graphs, num_workers=workers, steps_per_round=spr)
+    batch_wall = batch.wall_s
+
+    for s, b in zip(singles, batch.results):
+        assert s.best_size == b.best_size
+        same_sol = (s.best_sol is None and b.best_sol is None) or (
+            (s.best_sol == b.best_sol).all()
+        )
+        assert same_sol and s.rounds == b.rounds
+    return dict(
+        B=B,
+        seq_wall_s=round(seq_wall, 3),
+        batch_wall_s=round(batch_wall, 3),
+        seq_inst_per_s=round(B / seq_wall, 3),
+        batch_inst_per_s=round(B / batch_wall, 3),
+        speedup=round(seq_wall / batch_wall, 2),
+    )
+
+
+# the CI gate: the B=16 batched plane must hold at least this speedup over
+# the sequential loop (acceptance bar; measured headroom is ~5x above it)
+MIN_SPEEDUP_B16 = 2.0
+
+
+def run(smoke: bool = False) -> dict:
+    n, p, workers, spr = (24, 0.3, 4, 8) if smoke else (40, 0.28, 6, 8)
+    rows = [
+        _bench_one(B, n=n, p=p, workers=workers, spr=spr)
+        for B in BATCH_SIZES
+    ]
+    if smoke:  # the CI gate; full-size local runs just report
+        top = rows[-1]
+        assert top["B"] == 16 and top["speedup"] >= MIN_SPEEDUP_B16, (
+            f"batched plane regressed: B=16 speedup {top['speedup']}x "
+            f"< {MIN_SPEEDUP_B16}x (benchmark-gated CI, EXPERIMENTS.md §C)"
+        )
+    print(f"G({n}, {p}), {workers} workers/instance, "
+          f"steps_per_round={spr}; sequential loop = B x engine.solve")
+    print(f"{'B':>4} {'seq inst/s':>12} {'batch inst/s':>13} {'speedup':>8}")
+    for r in rows:
+        print(f"{r['B']:>4} {r['seq_inst_per_s']:>12} "
+              f"{r['batch_inst_per_s']:>13} {r['speedup']:>7}x")
+    return dict(n=n, p=p, workers=workers, steps_per_round=spr, rows=rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -41,7 +41,8 @@ def run(csv=True):
         print(",".join(keys))
         for r in rows:
             print(",".join(str(r[k]) for k in keys))
-    return rows
+    # dict form so benchmarks.run can record it in BENCH_smoke.json
+    return {"P_ref": P_REF, "rows": rows}
 
 
 if __name__ == "__main__":

@@ -4,17 +4,27 @@
   encoding_bytes    §4.3 serialization sizes
   protocol_stats    §3 message accounting (failed requests == 0)
   engine_throughput TPU-adapted engine rounds/transfers budget
+  batch_throughput  multi-instance solve plane vs sequential loop
   balancer_bench    beyond-paper serving balancer
   kernel_bench      kernel arithmetic-intensity table
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [name ...]
+Usage:  PYTHONPATH=src python -m benchmarks.run [--smoke] [name ...]
+
+``--smoke`` runs shrunken versions of the smoke-capable benchmarks (the
+default name set becomes SMOKE_DEFAULT) and records every dict a benchmark
+returns in BENCH_smoke.json — the per-PR perf trajectory the CI bench-smoke
+job uploads as an artifact.
 """
 
+import argparse
+import inspect
+import json
 import sys
 import time
 
 from benchmarks import (
     balancer_bench,
+    batch_throughput,
     encoding_bytes,
     engine_throughput,
     kernel_bench,
@@ -26,20 +36,61 @@ ALL = {
     "encoding_bytes": encoding_bytes,
     "protocol_stats": protocol_stats,
     "engine_throughput": engine_throughput,
+    "batch_throughput": batch_throughput,
     "balancer_bench": balancer_bench,
     "kernel_bench": kernel_bench,
     "speedup": speedup,
 }
 
+# kept fast enough for a per-PR CI job; full runs remain opt-in by name
+SMOKE_DEFAULT = ("encoding_bytes", "batch_throughput")
 
-def main() -> None:
-    names = sys.argv[1:] or list(ALL)
+SMOKE_JSON = "BENCH_smoke.json"
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="benchmarks.run")
+    ap.add_argument("names", nargs="*", help="benchmarks to run (default: all)")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help=f"shrunken sizes; record results in {SMOKE_JSON}",
+    )
+    args = ap.parse_args(argv)
+
+    names = args.names or (
+        list(SMOKE_DEFAULT) if args.smoke else list(ALL)
+    )
+    unknown = [n for n in names if n not in ALL]
+    if unknown:
+        print(
+            f"unknown benchmark(s): {', '.join(unknown)}\n"
+            f"available: {', '.join(sorted(ALL))}",
+            file=sys.stderr,
+        )
+        raise SystemExit(2)
+
+    recorded = {}
     for name in names:
-        mod = ALL[name]
+        run_fn = ALL[name].run
+        kwargs = (
+            {"smoke": True}
+            if args.smoke and "smoke" in inspect.signature(run_fn).parameters
+            else {}
+        )
         print(f"== {name} ==")
         t0 = time.perf_counter()
-        mod.run()
-        print(f"-- {name} done in {time.perf_counter() - t0:.1f}s\n", flush=True)
+        out = run_fn(**kwargs)
+        elapsed = time.perf_counter() - t0
+        print(f"-- {name} done in {elapsed:.1f}s\n", flush=True)
+        if isinstance(out, dict):
+            recorded[name] = dict(out, elapsed_s=round(elapsed, 1))
+
+    if args.smoke:
+        with open(SMOKE_JSON, "w") as f:
+            json.dump({"smoke": True, "benchmarks": recorded}, f, indent=2)
+            f.write("\n")
+        print(f"wrote {SMOKE_JSON} ({', '.join(recorded) or 'no dict results'})")
 
 
 if __name__ == "__main__":

@@ -35,13 +35,14 @@ import numpy as np
 
 from repro.core.superstep import (
     WorkerState,
+    build_batch_chunk_fn,
     build_chunk_fn,
     make_worker_state,
 )
 from repro.core.waiting_list import startup_assignment
 from repro.graphs.bitgraph import BitGraph, n_words
 from repro.problems.sequential import expand_frontier
-from repro.problems.vertex_cover import make_problem
+from repro.problems.vertex_cover import VCProblem, make_problem
 
 
 @dataclasses.dataclass
@@ -174,31 +175,322 @@ def solve(
             break
     wall = time.perf_counter() - t0
 
-    local_bests = np.asarray(jax.device_get(state.local_best_val))
+    # a solo state is the lane-less case of the batched fetch: add a B=1
+    # axis and reuse the one extraction path (`_extract_result`)
+    host = _fetch_batch_state(jax.tree.map(lambda x: x[None], state))
+    return _extract_result(
+        host,
+        0,
+        g,
+        rounds,
+        wall,
+        mode=mode,
+        k=k,
+        num_workers=num_workers,
+        packed_status=packed_status,
+    )
+
+
+# -- the multi-instance solve plane --------------------------------------------
+
+
+@dataclasses.dataclass
+class BatchResult:
+    """Per-instance results of one ``solve_many`` call.
+
+    ``results[i]`` corresponds to ``graphs[i]`` (submission order is
+    preserved across bucketing).  ``wall_s`` is the total wall time over all
+    buckets; each ``EngineResult.wall_s`` inside is the amortized share
+    (bucket wall / bucket size) — instances in a batch are not individually
+    timeable.
+    """
+
+    results: list
+    wall_s: float
+    # packing record: one (W, n_max, [instance indices]) triple per bucket
+    buckets: list
+    compactions: int
+
+
+def _bucket_instances(graphs, by_n: bool = False) -> dict:
+    """Group instance indices by packed width W = n_words(n).
+
+    Instances sharing W pad to the bucket's max n with isolated (never
+    in-mask) vertices — padding rows change no branching decision, so the
+    padded trace is bit-identical to the solo one (tests assert this).
+    Distinct W would change the task-record width, so it starts a new bucket
+    (and a new compiled executable).
+
+    ``by_n`` buckets by exact (W, n) instead: the basic codec's §4.3 payload
+    pad is n·W words, so mixing n under one pad would skew the per-instance
+    byte accounting that codec exists to measure.
+    """
+    buckets: dict = {}
+    for i, g in enumerate(graphs):
+        buckets.setdefault((g.W, g.n if by_n else None), []).append(i)
+    return buckets
+
+
+def _make_batch_problem(graphs, n_max: int, W: int) -> VCProblem:
+    """Pack B same-width instances into padded (B, n_max, W) problem tensors."""
+    B = len(graphs)
+    adj = np.zeros((B, n_max, W), np.uint32)
+    for b, g in enumerate(graphs):
+        adj[b, : g.n, :] = np.asarray(g.adj, np.uint32)
+    v = np.arange(n_max, dtype=np.int32)
+    return VCProblem(
+        n=jnp.asarray(np.array([g.n for g in graphs], np.int32)),
+        adj=jnp.asarray(adj),
+        word_idx=jnp.asarray(v // 32),
+        bit_idx=jnp.asarray((v % 32).astype(np.uint32)),
+    )
+
+
+def _make_batch_state(
+    graphs, num_workers: int, cap: int, W: int, initial_bests
+) -> WorkerState:
+    """(B, P, ...) stacked worker state: each instance is initialized and
+    §3.5-startup-scattered by exactly the solo-solve code path
+    (:func:`make_worker_state` + :func:`_scatter_startup`), then stacked —
+    one source of truth for the Algorithm-7 placement."""
+    per_instance = []
+    for g, initial_best in zip(graphs, initial_bests):
+        state = jax.vmap(lambda _: make_worker_state(cap, W, initial_best))(
+            jnp.arange(num_workers)
+        )
+        per_instance.append(_scatter_startup(state, g, num_workers))
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_instance)
+
+
+def _extract_result(
+    host_state: dict,
+    lane: int,
+    g: BitGraph,
+    rounds: int,
+    wall_s: float,
+    *,
+    mode: str,
+    k,
+    num_workers: int,
+    packed_status: bool,
+) -> EngineResult:
+    """Build one instance's EngineResult from a device-fetched batch state."""
+    local_bests = host_state["local_best_val"][lane]
     wbest = int(np.argmin(local_bests))
     best_size = int(local_bests[wbest])
-    best_sol = np.asarray(jax.device_get(state.best_sol))[wbest]
+    best_sol = host_state["best_sol"][lane][wbest]
     if mode == "fpt" and best_size > k:
         best_size, best_sol = -1, None
     if best_size > g.n:
         best_sol = None
-
     # payload_words/transfer_rounds are replicated (derived from the shared
-    # status table), so worker 0's view is the global truth.
-    payload_words = int(np.asarray(state.payload_words)[0])
-    transfer_rounds = int(np.asarray(state.transfer_rounds)[0])
+    # status table), so worker 0's view is the instance truth.
+    payload_words = int(host_state["payload_words"][lane][0])
+    transfer_rounds = int(host_state["transfer_rounds"][lane][0])
     return EngineResult(
         best_size=best_size,
         best_sol=best_sol,
         rounds=rounds,
-        nodes_expanded=int(np.asarray(state.nodes_expanded).sum()),
-        tasks_transferred=int(np.asarray(state.tasks_sent).sum()),
-        wall_s=wall,
-        overflow=bool(np.asarray(state.frontier.overflow).any()),
+        nodes_expanded=int(host_state["nodes_expanded"][lane].sum()),
+        tasks_transferred=int(host_state["tasks_sent"][lane].sum()),
+        wall_s=wall_s,
+        overflow=bool(host_state["overflow"][lane].any()),
         control_bytes_per_round=4 * (1 if packed_status else 3) * num_workers,
         transfer_rounds=transfer_rounds,
         transfer_bytes_total=4 * payload_words,
         transfer_bytes_per_round=4 * payload_words / max(rounds, 1),
+    )
+
+
+def _fetch_batch_state(state: WorkerState) -> dict:
+    s = jax.device_get(state)
+    return {
+        "local_best_val": np.asarray(s.local_best_val),
+        "best_sol": np.asarray(s.best_sol),
+        "nodes_expanded": np.asarray(s.nodes_expanded),
+        "tasks_sent": np.asarray(s.tasks_sent),
+        "overflow": np.asarray(s.frontier.overflow),
+        "transfer_rounds": np.asarray(s.transfer_rounds),
+        "payload_words": np.asarray(s.payload_words),
+    }
+
+
+def _pow2_at_least(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def solve_many(
+    graphs,
+    num_workers: int = 8,
+    *,
+    steps_per_round: int = 32,
+    lanes: int = 1,
+    policy_priority: bool = True,
+    codec: str = "optimized",
+    packed_status: bool = True,
+    skip_empty_transfer: bool = True,
+    transfer_impl: str = "sparse",
+    donate_k: int = 1,
+    chunk_rounds: int = 16,
+    mode: str = "bnb",
+    k=None,
+    max_rounds: int = 200_000,
+    capacity: Optional[int] = None,
+    compact_threshold: float = 0.25,
+) -> BatchResult:
+    """Solve B independent vertex-cover instances on ONE solve plane.
+
+    The paper's center is cheap so one coordinator can drive huge worker
+    pools; this extends the same amortization across *instances*: the batch
+    shares a single compiled chunk executable, one host sync per chunk for
+    the whole batch, and P workers per instance.  Per-instance
+    ``best_size``/``best_sol`` are bit-identical to B solo ``solve`` calls
+    (property-tested), because padding adds only isolated never-in-mask
+    vertices and all collectives are bound to the worker axis.
+
+    Packing: instances are bucketed by packed width ``W = n_words(n)`` and
+    padded to the bucket's max n — one executable per (n_max, W) bucket.
+    ``k`` (FPT mode) may be a single int or a per-instance sequence.
+
+    Compaction: finished instances are frozen no-op lanes; when the live
+    fraction of a bucket drops to ``compact_threshold`` or below, the batch
+    is compacted to the next power of two above the live count (bounding
+    recompiles to log2 B) and the finished lanes' results are collected
+    early.  ``compact_threshold=0`` disables compaction.
+
+    Capacity: one frontier size per bucket, ``4·n_max + 8·lanes`` — at least
+    the solo solve's ``4·n + 8·lanes``.  The engine sizes capacity so
+    overflow never fires (tests assert it), so the extra tail slots are
+    behaviorally inert; a solo run that DID overflow (an engine-sizing bug)
+    could drop tasks its batched lane keeps.  Pass ``capacity`` to pin an
+    exact size.
+    """
+    graphs = list(graphs)
+    B = len(graphs)
+    if mode == "fpt":
+        ks = list(k) if hasattr(k, "__len__") else [k] * B
+        if len(ks) != B or any(kk is None for kk in ks):
+            raise ValueError("fpt mode needs one k (or one per instance)")
+    else:
+        ks = [None] * B
+    results: dict = {}
+    bucket_record = []
+    compactions = 0
+    wall_total = 0.0
+
+    for (W, _), idxs in sorted(_bucket_instances(graphs, by_n=(codec == "basic")).items()):
+        t0 = time.perf_counter()
+        bucket_graphs = [graphs[i] for i in idxs]
+        n_max = max(g.n for g in bucket_graphs)
+        bucket_record.append((W, n_max, list(idxs)))
+        cap = capacity or (4 * n_max + 8 * lanes)
+        pad = (n_max * W) if codec == "basic" else 0
+        initial_bests = [
+            (g.n + 1 if mode == "bnb" else ks[i] + 1)
+            for i, g in zip(idxs, bucket_graphs)
+        ]
+
+        problems = _make_batch_problem(bucket_graphs, n_max, W)
+        state = _make_batch_state(
+            bucket_graphs, num_workers, cap, W, initial_bests
+        )
+        fpt_bounds = (
+            jnp.asarray(np.array([ks[i] for i in idxs], np.int32))
+            if mode == "fpt"
+            else None
+        )
+
+        def make_chunk(probs, bounds):
+            return build_batch_chunk_fn(
+                probs,
+                steps_per_round=steps_per_round,
+                lanes=lanes,
+                policy_priority=policy_priority,
+                transfer_pad_words=pad,
+                packed_status=packed_status,
+                skip_empty_transfer=skip_empty_transfer,
+                transfer_impl=transfer_impl,
+                donate_k=donate_k,
+                chunk_rounds=chunk_rounds,
+                fpt_bounds=bounds,
+            )
+
+        chunk_fn = make_chunk(problems, fpt_bounds)
+        lanes_orig = np.array(idxs)  # lane -> original instance index
+        done = jnp.zeros((len(idxs),), bool)
+        rounds_done = np.zeros(B, np.int64)
+        total_ran = 0
+        while total_ran < max_rounds:
+            state, done, delta, ran = chunk_fn(state, done)
+            done_h, delta_h, ran_h = jax.device_get((done, delta, ran))
+            rounds_done[lanes_orig] += np.asarray(delta_h)
+            total_ran += int(ran_h)
+            done_h = np.asarray(done_h)
+            if done_h.all():
+                break
+            n_live = int((~done_h).sum())
+            n_lanes = len(lanes_orig)
+            target = _pow2_at_least(n_live)
+            if (
+                compact_threshold > 0
+                and n_live <= compact_threshold * n_lanes
+                and target < n_lanes
+            ):
+                # collect finished lanes now, keep live ones (plus frozen
+                # finished fillers up to the pow2 target so recompiles stay
+                # O(log B)), reslice every tensor, rebuild the executable.
+                host = _fetch_batch_state(state)
+                live = np.flatnonzero(~done_h)
+                fillers = np.flatnonzero(done_h)[: target - n_live]
+                for lane in np.flatnonzero(done_h):
+                    oi = int(lanes_orig[lane])
+                    if oi not in results and lane not in fillers:
+                        results[oi] = (lane, host, int(rounds_done[oi]))
+                sel = np.concatenate([live, fillers]).astype(np.int64)
+                state = jax.tree.map(lambda x: x[sel], state)
+                problems = VCProblem(
+                    n=problems.n[sel],
+                    adj=problems.adj[sel],
+                    word_idx=problems.word_idx,
+                    bit_idx=problems.bit_idx,
+                )
+                if fpt_bounds is not None:
+                    fpt_bounds = fpt_bounds[sel]
+                done = jnp.asarray(done_h[sel])
+                lanes_orig = lanes_orig[sel]
+                chunk_fn = make_chunk(problems, fpt_bounds)
+                compactions += 1
+
+        host = _fetch_batch_state(state)
+        for lane, oi in enumerate(lanes_orig):
+            oi = int(oi)
+            if oi not in results:
+                results[oi] = (lane, host, int(rounds_done[oi]))
+        bucket_wall = time.perf_counter() - t0
+        wall_total += bucket_wall
+        per_wall = bucket_wall / max(len(idxs), 1)
+        for oi in idxs:
+            lane, host_i, rounds_i = results[oi]
+            results[oi] = _extract_result(
+                host_i,
+                lane,
+                graphs[oi],
+                rounds_i,
+                per_wall,
+                mode=mode,
+                k=ks[oi],
+                num_workers=num_workers,
+                packed_status=packed_status,
+            )
+
+    return BatchResult(
+        results=[results[i] for i in range(B)],
+        wall_s=wall_total,
+        buckets=bucket_record,
+        compactions=compactions,
     )
 
 

@@ -164,3 +164,28 @@ def push_one(f: Frontier, mask, sol, depth, valid):
     return push_many(
         f, mask[None], sol[None], depth[None].astype(jnp.int32), valid[None]
     )
+
+
+# -- batched (instance-axis) views ---------------------------------------------
+#
+# The multi-instance solve plane (`engine.solve_many`) stacks B independent
+# instances in front of the (P, CAP, ...) worker axes.  The per-slot ops above
+# are shape-polymorphic pure functions, so the batched forms are plain vmaps —
+# kept here (rather than inlined at call sites) so every layer talks about the
+# same instance axis and tests can exercise it directly.  Each wrapper maps
+# over ONE leading axis; compose them (worker axis inside, instance axis
+# outside) for (B, P, ...) pools.
+
+pop_deepest_b = jax.vmap(pop_deepest, in_axes=(0, None))
+pop_k_shallowest_b = jax.vmap(pop_k_shallowest, in_axes=(0, None, 0))
+push_many_b = jax.vmap(push_many)
+
+
+def pending_per_worker(f: Frontier) -> jnp.ndarray:
+    """Pending counts for a stacked frontier, summed over the slot axis only.
+
+    Works for any leading stack: (P, CAP) active -> (P,); (B, P, CAP) ->
+    (B, P).  ``Frontier.pending`` sums over EVERYTHING, which is the right
+    scalar inside a per-worker superstep but useless for the host-side
+    per-instance quiescence/compaction checks."""
+    return f.active.sum(axis=-1).astype(jnp.int32)

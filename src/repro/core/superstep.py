@@ -454,6 +454,158 @@ def build_superstep_fn(
     )
 
 
+# -- the instance axis ---------------------------------------------------------
+#
+# `solve_many` stacks B independent instances in front of the worker axis:
+# state leaves become (B, P, ...) and the problem gains per-instance leaves
+# (adj (B, n, W), n (B,)) while word_idx/bit_idx stay shared.  The collectives
+# inside `superstep` are bound to the WORKER axis name, so vmapping the whole
+# worker-mapped step over an unnamed instance axis keeps every all-gather /
+# psum / pmin confined to one instance: donation cannot cross the instance
+# axis by construction (tested in tests/test_solve_many.py).
+
+# vmap axis spec for a batched VCProblem: per-instance n/adj, shared bit maps
+PROBLEM_IN_AXES = VCProblem(n=0, adj=0, word_idx=None, bit_idx=None)
+
+
+def _expand_like(flags: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast a (B,) flag vector against a (B, ...) state leaf."""
+    return flags.reshape(flags.shape + (1,) * (leaf.ndim - 1))
+
+
+def build_batch_superstep_fn(
+    problems: VCProblem,
+    *,
+    steps_per_round: int,
+    lanes: int,
+    policy_priority: bool = True,
+    transfer_pad_words: int = 0,
+    packed_status: bool = True,
+    skip_empty_transfer: bool = True,
+    transfer_impl: str = "sparse",
+    donate_k: int = 1,
+    axis_name: str = "workers",
+):
+    """Jitted ``state -> (state, done)`` over (B, P, ...) stacked state.
+
+    ``problems`` is a batched :class:`VCProblem` (leading instance axis on
+    ``n``/``adj``; ``word_idx``/``bit_idx`` shared).  ``done`` is (B,) bool —
+    exact PER-INSTANCE quiescence.  One superstep always runs for every
+    instance (no freezing); use :func:`build_batch_chunk_fn` for solve loops,
+    which masks finished instances into no-op lanes.
+    """
+    step = functools.partial(
+        superstep,
+        axis_name=axis_name,
+        steps_per_round=steps_per_round,
+        lanes=lanes,
+        policy_priority=policy_priority,
+        transfer_pad_words=transfer_pad_words,
+        packed_status=packed_status,
+        skip_empty_transfer=skip_empty_transfer,
+        transfer_impl=transfer_impl,
+        donate_k=donate_k,
+    )
+
+    def one_instance(problem, state):
+        state, done = jax.vmap(
+            lambda s: step(problem, s), axis_name=axis_name
+        )(state)
+        return state, done.all()
+
+    bstep = jax.vmap(one_instance, in_axes=(PROBLEM_IN_AXES, 0))
+
+    def run(state):
+        return bstep(problems, state)
+
+    return jax.jit(run)
+
+
+def build_batch_chunk_fn(
+    problems: VCProblem,
+    *,
+    steps_per_round: int,
+    lanes: int,
+    policy_priority: bool = True,
+    transfer_pad_words: int = 0,
+    packed_status: bool = True,
+    skip_empty_transfer: bool = True,
+    transfer_impl: str = "sparse",
+    donate_k: int = 1,
+    chunk_rounds: int = 16,
+    fpt_bounds: Optional[jnp.ndarray] = None,
+    axis_name: str = "workers",
+):
+    """Device-resident multi-round runner over a batch of instances.
+
+    Returns a jitted ``(state, done) -> (state, done, rounds_delta, ran)``:
+
+    * ``state``        (B, P, ...) stacked worker state;
+    * ``done``         (B,) bool carried ACROSS chunks — instances that
+      finished (quiescent, or FPT bound hit when ``fpt_bounds`` (B,) int32 is
+      given) become no-op lanes: their state is frozen by a select, so stats
+      stay bit-identical to a solo run while live instances keep stepping;
+    * ``rounds_delta`` (B,) int32 supersteps each instance actually ran this
+      chunk (0 for already-finished lanes);
+    * ``ran``          () int32 supersteps the chunk executed (max over
+      instances) — the host's ``max_rounds`` progress counter.
+
+    The while_loop exits when EVERY instance is done or after
+    ``chunk_rounds`` supersteps, so one straggler instance never forces the
+    finished majority through extra host syncs — and the host can compact
+    the batch between chunks (see ``engine.solve_many``).
+    """
+    if chunk_rounds < 1:
+        raise ValueError(f"chunk_rounds must be >= 1, got {chunk_rounds}")
+    sstep = build_batch_superstep_fn(
+        problems,
+        steps_per_round=steps_per_round,
+        lanes=lanes,
+        policy_priority=policy_priority,
+        transfer_pad_words=transfer_pad_words,
+        packed_status=packed_status,
+        skip_empty_transfer=skip_empty_transfer,
+        transfer_impl=transfer_impl,
+        donate_k=donate_k,
+        axis_name=axis_name,
+    )
+
+    def cond(carry):
+        _, done, _, i = carry
+        return jnp.logical_not(done.all()) & (i < chunk_rounds)
+
+    def body(carry):
+        state, done, rounds_delta, i = carry
+        new_state, step_done = sstep(state)
+        # freeze finished lanes: their superstep is a no-op by construction
+        # (empty frontier -> nothing pops, no donor match), but the select
+        # also pins the round/stat counters so per-instance results stay
+        # bit-identical to a solo `engine.solve` run.
+        state = jax.tree.map(
+            lambda old, new: jnp.where(_expand_like(done, new), old, new),
+            state,
+            new_state,
+        )
+        new_done = done | step_done
+        if fpt_bounds is not None:
+            # best_val is the global (per-instance) min after the pmin phase,
+            # replicated across workers: lane 0's view is the instance truth.
+            new_done = new_done | (state.best_val[:, 0] <= fpt_bounds)
+        rounds_delta = rounds_delta + jnp.where(done, 0, 1).astype(jnp.int32)
+        return state, new_done, rounds_delta, i + 1
+
+    def run(state, done):
+        B = done.shape[0]
+        state, done, rounds_delta, ran = jax.lax.while_loop(
+            cond,
+            body,
+            (state, done, jnp.zeros((B,), jnp.int32), jnp.int32(0)),
+        )
+        return state, done, rounds_delta, ran
+
+    return jax.jit(run)
+
+
 def build_chunk_fn(
     problem: VCProblem,
     *,

@@ -6,11 +6,18 @@
   --engine central   the fully-centralized baseline (Abu-Khzam 2006)
   --engine seq       the sequential reference
 
+Multi-instance mode (the batched solve plane, `engine.solve_many`): pass
+several DIMACS files and/or `--batch B` to pack B instances onto one plane —
+one compiled executable and one host sync per chunk for the whole batch.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.solve --graph gnp --n 60 --p 0.1 \
       --engine spmd --workers 8
   PYTHONPATH=src python -m repro.launch.solve --graph phat --n 120 \
       --density 0.4 --engine protocol --workers 16 --codec basic
+  PYTHONPATH=src python -m repro.launch.solve --graph dimacs \
+      --files a.col b.col c.col --workers 8
+  PYTHONPATH=src python -m repro.launch.solve --graph gnp --n 40 --batch 16
 """
 
 from __future__ import annotations
@@ -22,15 +29,36 @@ import time
 from repro.graphs.generators import erdos_renyi, p_hat_like, parse_dimacs
 
 
-def build_graph(args):
+def build_graph(args, seed=None):
+    seed = args.seed if seed is None else seed
     if args.graph == "gnp":
-        return erdos_renyi(args.n, args.p if args.p else 4.0 / (args.n - 1), args.seed)
+        return erdos_renyi(args.n, args.p if args.p else 4.0 / (args.n - 1), seed)
     if args.graph == "phat":
-        return p_hat_like(args.n, args.density, args.seed)
+        return p_hat_like(args.n, args.density, seed)
     if args.graph == "dimacs":
         with open(args.file) as f:
             return parse_dimacs(f.read())
     raise ValueError(args.graph)
+
+
+def build_graphs(args):
+    """The multi-instance work list: every --files entry, plus --batch
+    generated instances (consecutive seeds).  Empty unless one of those
+    multi-instance flags was used."""
+    graphs, labels = [], []
+    for path in args.files or []:
+        with open(path) as f:
+            graphs.append(parse_dimacs(f.read()))
+        labels.append(path)
+    if args.batch is not None:
+        if args.batch < 1:
+            raise SystemExit("--batch must be >= 1")
+        if args.graph == "dimacs":
+            raise SystemExit("--batch needs a generated graph (gnp/phat)")
+        for b in range(args.batch):
+            graphs.append(build_graph(args, seed=args.seed + b))
+            labels.append(f"{args.graph}-n{args.n}-seed{args.seed + b}")
+    return graphs, labels
 
 
 def main():
@@ -40,6 +68,12 @@ def main():
     ap.add_argument("--p", type=float, default=0.0)
     ap.add_argument("--density", type=float, default=0.4)
     ap.add_argument("--file", default=None)
+    ap.add_argument("--files", nargs="+", default=None,
+                    help="several DIMACS files -> one solve_many batch")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="generate B instances (seeds seed..seed+B-1) and "
+                         "solve them on one batched plane (B=1 still uses "
+                         "the batched engine)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
         "--engine", default="spmd", choices=["spmd", "protocol", "central", "seq"]
@@ -60,6 +94,42 @@ def main():
     ap.add_argument("--mode", default="bnb", choices=["bnb", "fpt"])
     ap.add_argument("--k", type=int, default=None)
     args = ap.parse_args()
+
+    batch_graphs, batch_labels = build_graphs(args)
+    if batch_graphs:
+        if args.engine != "spmd":
+            raise SystemExit("multi-instance mode is spmd-only")
+        if args.use_mesh:
+            raise SystemExit(
+                "multi-instance mode has no mesh path yet (vmap virtual "
+                "workers only) — drop --use-mesh"
+            )
+        from repro.core.engine import solve_many
+
+        print(f"[solve] batch of {len(batch_graphs)} instances, "
+              f"workers/instance={args.workers}")
+        res = solve_many(
+            batch_graphs,
+            num_workers=args.workers,
+            steps_per_round=args.steps_per_round,
+            lanes=args.lanes,
+            policy_priority=(args.policy == "priority"),
+            codec=args.codec,
+            transfer_impl=args.transfer,
+            donate_k=args.donate_k,
+            chunk_rounds=args.chunk_rounds,
+            mode=args.mode,
+            k=args.k,
+        )
+        for label, r in zip(batch_labels, res.results):
+            print(f"[solve]   {label}: mvc={r.best_size} rounds={r.rounds} "
+                  f"nodes={r.nodes_expanded} transfers={r.tasks_transferred}")
+        n_buckets = len(res.buckets)
+        print(f"[solve] batch done: {len(batch_graphs)} instances in "
+              f"{res.wall_s:.2f}s "
+              f"({len(batch_graphs) / max(res.wall_s, 1e-9):.2f} inst/s), "
+              f"{n_buckets} bucket(s), {res.compactions} compaction(s)")
+        return
 
     g = build_graph(args)
     print(f"[solve] graph n={g.n} m={g.num_edges} engine={args.engine}")

@@ -106,6 +106,101 @@ def rebalance(state: BalancerState) -> int:
     return moved
 
 
+# -- solve-plane admission ------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SolveBatcher:
+    """Admit a stream of vertex-cover solve requests into fixed-size
+    ``engine.solve_many`` batches.
+
+    This is the serving front of the batched solve plane: a request's
+    "replica" is one of the B lanes of a solve batch, so the continuous-
+    batching occupancy machinery above applies unchanged — each (W) packing
+    bucket is a :class:`RequestBatch` whose ``capacity`` is the plane's batch
+    size, and ``admit()`` (largest-work-first) decides which queued instances
+    fill the free lanes, so big instances never starve behind a stream of
+    small ones.  Queue entries are ``(work, -seq)`` pairs — the work
+    estimate is the instance size, the same §3.2 single-integer metadata the
+    solver's center runs on; the negated sequence makes equal-size requests
+    drain FIFO under the descending sort.  Buckets follow the solve plane's
+    packing rule (one batch never mixes W; `solve_many` pads n within a
+    bucket).
+
+    Only the admission half of :class:`RequestBatch` (``admit``/
+    ``occupancy``) tolerates these tuple entries — never feed a batcher
+    bucket to ``step()``/``status()``/``rebalance``, which do integer
+    arithmetic on the work values.
+    """
+
+    batch_size: int
+    buckets: dict = dataclasses.field(default_factory=dict)  # W -> RequestBatch
+    graphs: dict = dataclasses.field(default_factory=dict)  # seq -> instance
+    _seq: int = 0
+
+    def submit(self, g) -> int:
+        """Queue one instance; returns its ticket (submission sequence)."""
+        seq = self._seq
+        self._seq += 1
+        self.graphs[seq] = g
+        rb = self.buckets.setdefault(
+            g.W, RequestBatch(self.batch_size, [], [])
+        )
+        rb.queued_work.append((g.n, -seq))
+        return seq
+
+    def _drain(self, rb: RequestBatch) -> list:
+        lanes, rb.active_work = rb.active_work, []
+        return [-neg_seq for _, neg_seq in lanes]
+
+    def take(self, tickets) -> list:
+        """Hand a drained batch's instances to the solver, EVICTING them —
+        the batcher holds a graph only between submit and take, so a
+        long-lived admission stream does not accumulate solved instances."""
+        return [self.graphs.pop(t) for t in tickets]
+
+    def ready_batches(self) -> list:
+        """Every FULL plane currently admissible: lists of tickets, one list
+        per batch.  Partially-filled planes stay queued (call ``flush``)."""
+        out = []
+        for rb in self.buckets.values():
+            rb.admit()
+            while rb.occupancy == rb.capacity:
+                out.append(self._drain(rb))
+                rb.admit()
+        return out
+
+    def flush(self) -> list:
+        """Full planes plus every partially-filled one (end of stream)."""
+        out = self.ready_batches()
+        for rb in self.buckets.values():
+            rb.admit()
+            if rb.active_work:
+                out.append(self._drain(rb))
+        return out
+
+
+def solve_stream(graphs, batch_size: int, solver=None, **solve_kw) -> list:
+    """Drive a request stream through the batcher onto the batched solve
+    plane; returns per-instance results in SUBMISSION order.
+
+    ``solver`` defaults to :func:`repro.core.engine.solve_many` (injectable
+    so the admission logic stays testable without the jax engine)."""
+    if solver is None:
+        from repro.core.engine import solve_many as solver_fn
+
+        def solver(gs, **kw):
+            return solver_fn(gs, **kw).results
+
+    batcher = SolveBatcher(batch_size)
+    tickets = [batcher.submit(g) for g in graphs]
+    results = {}
+    for batch in batcher.flush():
+        for seq, res in zip(batch, solver(batcher.take(batch), **solve_kw)):
+            results[seq] = res
+    return [results[t] for t in tickets]
+
+
 def simulate(
     num_replicas: int,
     capacity: int,

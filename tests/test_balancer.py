@@ -3,7 +3,22 @@
 import numpy as np
 from _hypothesis_compat import given, settings, strategies as st
 
-from repro.serving.balancer import BalancerState, RequestBatch, rebalance, simulate
+from repro.serving.balancer import (
+    BalancerState,
+    RequestBatch,
+    SolveBatcher,
+    rebalance,
+    simulate,
+    solve_stream,
+)
+
+
+class _FakeGraph:
+    """Just enough of a BitGraph for the admission logic (n, W)."""
+
+    def __init__(self, n):
+        self.n = n
+        self.W = (n + 31) // 32
 
 
 def test_rebalance_moves_heaviest_to_neediest():
@@ -41,6 +56,38 @@ def test_work_conservation(works, replicas):
             w for r in reps for w in (r.active_work + r.queued_work)
         )
         assert total == sorted(works)
+
+
+def test_solve_batcher_buckets_and_fills():
+    """Requests bucket by packed width W (the solve plane's packing rule)
+    and full planes drain largest-work-first (the balancer's admit order)."""
+    b = SolveBatcher(batch_size=2)
+    tickets = [b.submit(_FakeGraph(n)) for n in (20, 40, 22, 44, 24)]
+    batches = b.ready_batches()
+    # W=1 bucket had 3 queued: the largest two (24, 22) form the full plane
+    assert [sorted(g.n for g in b.take(batch)) for batch in batches] == [
+        [22, 24],
+        [40, 44],
+    ]
+    # the leftover partial plane only drains on flush
+    rest = b.flush()
+    assert [[g.n for g in b.take(batch)] for batch in rest] == [[20]]
+    assert sorted(s for batch in batches + rest for s in batch) == tickets
+    assert b.graphs == {}  # take() evicted everything the stream solved
+
+
+def test_solve_stream_returns_submission_order():
+    gs = [_FakeGraph(n) for n in (20, 40, 22, 24, 44, 26, 28)]
+    seen = []
+
+    def fake_solver(batch, **kw):
+        assert len({g.W for g in batch}) == 1  # never mixes buckets
+        seen.append([g.n for g in batch])
+        return [g.n * 100 for g in batch]
+
+    out = solve_stream(gs, 2, solver=fake_solver)
+    assert out == [g.n * 100 for g in gs]
+    assert all(len(batch) <= 2 for batch in seen)
 
 
 def test_balancing_reduces_makespan():

@@ -1,5 +1,6 @@
 """Frontier push/pop properties (hypothesis): never loses or duplicates."""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 from _hypothesis_compat import given, settings, strategies as st
@@ -97,3 +98,38 @@ def test_multiset_conservation(ops):
             else:
                 assert not bool(valid)
         assert int(f.pending()) == len(model)
+
+
+def test_batched_views_are_per_instance():
+    """The instance-axis wrappers act on each stacked frontier independently
+    (same results as looping the per-instance ops)."""
+    from repro.core.frontier import (
+        pending_per_worker,
+        pop_deepest_b,
+        pop_k_shallowest_b,
+        push_many_b,
+    )
+
+    f0 = _push(make_frontier(8, W), [3, 1, 5])
+    f1 = _push(make_frontier(8, W), [2, 7])
+    stacked = jax.tree.map(lambda a, b: jnp.stack([a, b]), f0, f1)
+    assert np.asarray(pending_per_worker(stacked)).tolist() == [3, 2]
+
+    s2, masks, sols, depths, valid = pop_deepest_b(stacked, 1)
+    assert np.asarray(depths)[:, 0].tolist() == [5, 7]
+    assert np.asarray(pending_per_worker(s2)).tolist() == [2, 1]
+
+    s3, _, _, depths, valid = pop_k_shallowest_b(
+        stacked, 2, jnp.asarray([2, 1], jnp.int32)
+    )
+    assert np.asarray(depths)[0].tolist() == [1, 3]
+    assert np.asarray(valid).tolist() == [[True, True], [True, False]]
+
+    s4 = push_many_b(
+        s3,
+        jnp.zeros((2, 1, W), jnp.uint32),
+        jnp.zeros((2, 1, W), jnp.uint32),
+        jnp.full((2, 1), 9, jnp.int32),
+        jnp.asarray([[True], [False]]),
+    )
+    assert np.asarray(pending_per_worker(s4)).tolist() == [2, 1]
