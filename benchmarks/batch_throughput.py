@@ -76,7 +76,10 @@ def run(smoke: bool = False) -> dict:
     for r in rows:
         print(f"{r['B']:>4} {r['seq_inst_per_s']:>12} "
               f"{r['batch_inst_per_s']:>13} {r['speedup']:>7}x")
-    return dict(n=n, p=p, workers=workers, steps_per_round=spr, rows=rows)
+    return dict(
+        problem="vertex_cover", n=n, p=p, workers=workers,
+        steps_per_round=spr, rows=rows,
+    )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,56 @@
+"""Max-clique smoke solve on the generic problem plane.
+
+The bench-smoke CI job runs this alongside the vertex-cover benchmarks so
+every PR exercises a SECOND registry problem end to end: a small batch of
+G(n, p) instances solved by ``engine.solve_many(problem="max_clique")``,
+checked against the sequential reference, with throughput recorded in
+BENCH_smoke.json (tagged with the problem name).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import engine as E
+from repro.graphs.generators import erdos_renyi
+from repro.problems.sequential import solve_sequential_max_clique, verify_clique
+
+
+def run(smoke: bool = False) -> dict:
+    n, p, B, workers, spr = (20, 0.4, 4, 4, 8) if smoke else (32, 0.35, 8, 6, 8)
+    graphs = [erdos_renyi(n, p, seed) for seed in range(B)]
+
+    t0 = time.perf_counter()
+    batch = E.solve_many(
+        graphs, num_workers=workers, steps_per_round=spr, problem="max_clique"
+    )
+    wall = time.perf_counter() - t0
+
+    sizes = []
+    for g, r in zip(graphs, batch.results):
+        want, _, _ = solve_sequential_max_clique(g)
+        assert r.best_size == want, (
+            f"max-clique plane disagrees with the sequential reference: "
+            f"{r.best_size} != {want}"
+        )
+        assert verify_clique(g, r.best_sol)
+        assert not r.overflow
+        sizes.append(r.best_size)
+
+    print(f"max_clique on G({n}, {p}) x {B}: sizes={sizes}, "
+          f"{B / max(batch.wall_s, 1e-9):.2f} inst/s "
+          f"(all verified vs sequential reference)")
+    return dict(
+        problem="max_clique",
+        n=n,
+        p=p,
+        B=B,
+        workers=workers,
+        sizes=sizes,
+        wall_s=round(wall, 3),
+        inst_per_s=round(B / max(batch.wall_s, 1e-9), 3),
+    )
+
+
+if __name__ == "__main__":
+    run()

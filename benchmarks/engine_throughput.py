@@ -32,8 +32,9 @@ from repro.core.superstep import (
 )
 from repro.graphs.bitgraph import n_words
 from repro.graphs.generators import erdos_renyi, p_hat_like
+from repro.problems.base import make_data
+from repro.problems.registry import get_problem
 from repro.problems.sequential import solve_sequential
-from repro.problems.vertex_cover import make_problem
 
 
 def budget_rows():
@@ -70,17 +71,18 @@ def chunked_ab(P=64, K=32, R=96, n=32, seed=1):
     g = erdos_renyi(n, 0.3, seed)
     W = n_words(g.n)
     cap = 4 * g.n + 8
-    problem = make_problem(jnp.asarray(g.adj), g.n)
+    spec = get_problem("vertex_cover")
+    data = make_data(spec, g)
     s0 = jax.vmap(lambda _: make_worker_state(cap, W, g.n + 1))(jnp.arange(P))
-    s0 = E._scatter_startup(s0, g, P)
+    s0 = E._scatter_startup(s0, spec, g, P)
     out = []
     for spr, label in ((0, "coordination (steps_per_round=0)"),
                        (1, "compute round (steps_per_round=1)")):
         step_fn = build_superstep_fn(
-            problem, num_workers=P, steps_per_round=spr, lanes=1
+            spec, data, num_workers=P, steps_per_round=spr, lanes=1
         )
         chunk_fn = build_chunk_fn(
-            problem, num_workers=P, steps_per_round=spr, lanes=1,
+            spec, data, num_workers=P, steps_per_round=spr, lanes=1,
             chunk_rounds=K,
         )
         # compile

@@ -5,6 +5,7 @@
   protocol_stats    §3 message accounting (failed requests == 0)
   engine_throughput TPU-adapted engine rounds/transfers budget
   batch_throughput  multi-instance solve plane vs sequential loop
+  clique_smoke      max-clique on the generic plane vs sequential reference
   balancer_bench    beyond-paper serving balancer
   kernel_bench      kernel arithmetic-intensity table
 
@@ -13,7 +14,9 @@ Usage:  PYTHONPATH=src python -m benchmarks.run [--smoke] [name ...]
 ``--smoke`` runs shrunken versions of the smoke-capable benchmarks (the
 default name set becomes SMOKE_DEFAULT) and records every dict a benchmark
 returns in BENCH_smoke.json — the per-PR perf trajectory the CI bench-smoke
-job uploads as an artifact.
+job uploads as an artifact.  Every recorded entry is tagged with the
+branching problem it exercised (``problem``; vertex_cover unless the
+benchmark says otherwise).
 """
 
 import argparse
@@ -25,6 +28,7 @@ import time
 from benchmarks import (
     balancer_bench,
     batch_throughput,
+    clique_smoke,
     encoding_bytes,
     engine_throughput,
     kernel_bench,
@@ -37,13 +41,14 @@ ALL = {
     "protocol_stats": protocol_stats,
     "engine_throughput": engine_throughput,
     "batch_throughput": batch_throughput,
+    "clique_smoke": clique_smoke,
     "balancer_bench": balancer_bench,
     "kernel_bench": kernel_bench,
     "speedup": speedup,
 }
 
 # kept fast enough for a per-PR CI job; full runs remain opt-in by name
-SMOKE_DEFAULT = ("encoding_bytes", "batch_throughput")
+SMOKE_DEFAULT = ("encoding_bytes", "batch_throughput", "clique_smoke")
 
 SMOKE_JSON = "BENCH_smoke.json"
 
@@ -84,7 +89,10 @@ def main(argv=None) -> None:
         elapsed = time.perf_counter() - t0
         print(f"-- {name} done in {elapsed:.1f}s\n", flush=True)
         if isinstance(out, dict):
-            recorded[name] = dict(out, elapsed_s=round(elapsed, 1))
+            entry = dict(out, elapsed_s=round(elapsed, 1))
+            # every BENCH_smoke.json entry names the problem it exercised
+            entry.setdefault("problem", "vertex_cover")
+            recorded[name] = entry
 
     if args.smoke:
         with open(SMOKE_JSON, "w") as f:

@@ -5,9 +5,11 @@ semi-centralized, centralized and SPMD engines; reproduces the §4 comparison
   PYTHONPATH=src python examples/solve_dimacs.py [n] [density]
 
 Multi-file mode: pass DIMACS files and they are packed onto ONE batched
-solve plane (`engine.solve_many` — shared executable, per-instance results):
+solve plane (`engine.solve_many` — shared executable, per-instance results);
+`--problem max_clique` (or mis / vertex_cover) picks the registry problem:
 
   PYTHONPATH=src python examples/solve_dimacs.py --files a.col b.col c.col
+  PYTHONPATH=src python examples/solve_dimacs.py --problem mis --files a.col
 """
 
 import sys
@@ -18,28 +20,49 @@ from repro.core.centralized import run_centralized_sim
 from repro.core.engine import solve, solve_many
 from repro.core.protocol_sim import run_protocol_sim
 from repro.graphs.generators import p_hat_like, parse_dimacs, to_dimacs
+from repro.problems.registry import get_problem
 from repro.problems.sequential import solve_sequential
 
 
-def solve_files(paths):
+def solve_files(paths, problem="vertex_cover"):
     """Pack several DIMACS instances onto one batched solve plane."""
+    spec = get_problem(problem)  # ValueError lists known names on a typo
     graphs = []
     for path in paths:
         with open(path) as f:
             graphs.append(parse_dimacs(f.read()))
-    res = solve_many(graphs, num_workers=8, steps_per_round=16)
-    print(f"{len(graphs)} instances on one plane, "
+    res = solve_many(graphs, num_workers=8, steps_per_round=16, problem=spec)
+    print(f"{len(graphs)} instances [{spec.name}] on one plane, "
           f"{len(res.buckets)} (n,W) bucket(s), {res.wall_s:.2f}s total "
           f"({len(graphs) / max(res.wall_s, 1e-9):.2f} inst/s)")
     for path, g, r in zip(paths, graphs, res.results):
-        print(f"  {path}: n={g.n} m={g.num_edges} mvc={r.best_size} "
-              f"rounds={r.rounds} nodes={r.nodes_expanded}")
+        ok = spec.verify(g, r.best_sol)
+        print(f"  {path}: n={g.n} m={g.num_edges} best={r.best_size} "
+              f"rounds={r.rounds} nodes={r.nodes_expanded} verified={ok}")
 
 
 def main():
-    if len(sys.argv) > 1 and sys.argv[1] == "--files":
-        solve_files(sys.argv[2:])
+    argv = list(sys.argv[1:])
+    problem = "vertex_cover"
+    if "--problem" in argv:
+        i = argv.index("--problem")
+        if i + 1 >= len(argv):
+            raise SystemExit("error: --problem needs a name (e.g. max_clique)")
+        problem = argv[i + 1]
+        del argv[i : i + 2]
+        try:
+            get_problem(problem)
+        except ValueError as e:
+            raise SystemExit(f"error: {e}")
+    if argv and argv[0] == "--files":
+        solve_files(argv[1:], problem)
         return
+    if problem != "vertex_cover":
+        raise SystemExit(
+            "the single-instance §4 comparison is vertex-cover only; "
+            "use --problem with --files (the batched generic plane)"
+        )
+    sys.argv = [sys.argv[0]] + argv
     n = int(sys.argv[1]) if len(sys.argv) > 1 else 60
     density = float(sys.argv[2]) if len(sys.argv) > 2 else 0.4
     g = p_hat_like(n, density, seed=0)

@@ -21,6 +21,7 @@ import dataclasses
 import numpy as np
 
 from repro.graphs.bitgraph import BitGraph, n_words
+from repro.problems.base import RECORD_FIELDS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,33 +29,87 @@ class Task:
     """A search-tree node: induced-subgraph mask + partial solution + depth."""
 
     mask: np.ndarray  # (W,) uint32 -- vertices still in the instance
-    sol_mask: np.ndarray  # (W,) uint32 -- vertices already in the cover
+    sol_mask: np.ndarray  # (W,) uint32 -- vertices already in the solution
     depth: int
 
     def key(self) -> tuple:
         return (self.mask.tobytes(), self.sol_mask.tobytes(), self.depth)
 
 
+# the frontier's native task record — single-sourced from the plugin
+# protocol so the schema cannot drift between problems/ and the codecs
+DEFAULT_RECORD_FIELDS = RECORD_FIELDS
+
+
+def resolve_record_words(fields, n: int, W: int) -> int:
+    """Total u32 words of a record schema.  Widths are symbolic: "W" (one
+    packed bitset), "n*W" (an adjacency payload) or a literal int."""
+    total = 0
+    for _, width in fields:
+        if width == "W":
+            total += W
+        elif width == "n*W":
+            total += n * W
+        elif isinstance(width, int):
+            total += width
+        else:
+            raise ValueError(f"unknown record-field width {width!r}")
+    return total
+
+
 class OptimizedCodec:
-    """n-bit-mask encoding: 2W words + 1 depth word per task."""
+    """n-bit-mask encoding: the problem's record schema verbatim (for the
+    native (mask, sol, depth) layout: 2W + 1 words per task).
+
+    A schema must START with the native triple — the frontier owns those
+    fields; anything after rides as zero-filled extra payload words that
+    both ``encode`` and the SPMD data plane (via ``pad_words``) actually
+    carry, so byte accounting always matches the wire.
+    """
 
     name = "optimized"
 
-    def __init__(self, n: int):
+    def __init__(self, n: int, fields=DEFAULT_RECORD_FIELDS):
+        if tuple(fields[:3]) != tuple(DEFAULT_RECORD_FIELDS):
+            raise ValueError(
+                f"record schema must start with the native "
+                f"{DEFAULT_RECORD_FIELDS} triple, got {tuple(fields[:3])}"
+            )
         self.n = n
         self.W = n_words(n)
+        self.fields = tuple(fields)
 
     @property
     def record_words(self) -> int:
-        return 2 * self.W + 1
+        return resolve_record_words(self.fields, self.n, self.W)
 
     @property
     def record_bytes(self) -> int:
         return 4 * self.record_words
 
+    @property
+    def native_words(self) -> int:
+        return resolve_record_words(DEFAULT_RECORD_FIELDS, self.n, self.W)
+
+    @property
+    def pad_words(self) -> int:
+        """Payload words over the frontier's native record — what the SPMD
+        engine appends (zero-filled) per task so the collective moves this
+        codec's exact wire size (schema extras plus any codec payload)."""
+        return self.record_words - self.native_words
+
+    def _extra_zeros(self) -> np.ndarray:
+        extra = resolve_record_words(self.fields[3:], self.n, self.W)
+        return np.zeros(extra, dtype=np.uint32)
+
     def encode(self, task: Task) -> np.ndarray:
         return np.concatenate(
-            [task.mask, task.sol_mask, np.array([task.depth], dtype=np.uint32)]
+            [
+                task.mask,
+                task.sol_mask,
+                np.array([task.depth], dtype=np.uint32),
+                self._extra_zeros(),
+            ]
         ).astype(np.uint32)
 
     def decode(self, rec: np.ndarray, graph: BitGraph | None = None) -> Task:
@@ -66,24 +121,17 @@ class OptimizedCodec:
         )
 
 
-class BasicCodec:
+class BasicCodec(OptimizedCodec):
     """Adjacency-list encoding: the induced subgraph's rows travel with the
-    task -- (n+2)·W + 1 words.  The decode does NOT need the original graph
-    (that is its only advantage)."""
+    task -- n·W words on top of the problem's record schema ((n+2)·W + 1 for
+    the default layout).  The decode does NOT need the original graph (that
+    is its only advantage)."""
 
     name = "basic"
 
-    def __init__(self, n: int):
-        self.n = n
-        self.W = n_words(n)
-
     @property
     def record_words(self) -> int:
-        return (self.n + 2) * self.W + 1
-
-    @property
-    def record_bytes(self) -> int:
-        return 4 * self.record_words
+        return self.n * self.W + super().record_words
 
     def encode(self, task: Task, graph: BitGraph) -> np.ndarray:
         sub_adj = (graph.adj & task.mask[None, :]).astype(np.uint32)
@@ -98,6 +146,7 @@ class BasicCodec:
                 task.mask,
                 task.sol_mask,
                 np.array([task.depth], dtype=np.uint32),
+                self._extra_zeros(),
             ]
         ).astype(np.uint32)
 
@@ -111,9 +160,26 @@ class BasicCodec:
         )
 
 
-def make_codec(name: str, n: int):
-    if name == "optimized":
-        return OptimizedCodec(n)
-    if name == "basic":
-        return BasicCodec(n)
-    raise ValueError(f"unknown codec {name!r}")
+CODECS = {"optimized": OptimizedCodec, "basic": BasicCodec}
+
+
+def known_codecs() -> list:
+    return sorted(CODECS)
+
+
+def make_codec(name: str, n: int, problem=None):
+    """Build a codec, parameterized by the problem's record schema.
+
+    ``problem`` is an optional :class:`~repro.problems.base.BranchingProblem`
+    (its ``record_fields`` define the task-record layout); omitted, the
+    default (mask, sol, depth) layout applies.  Unknown names raise a
+    ``ValueError`` listing what IS available (the CLIs surface it verbatim).
+    """
+    if name not in CODECS:
+        raise ValueError(
+            f"unknown codec {name!r}; known codecs: {', '.join(known_codecs())}"
+        )
+    fields = (
+        problem.record_fields if problem is not None else DEFAULT_RECORD_FIELDS
+    )
+    return CODECS[name](n, fields)

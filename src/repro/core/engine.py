@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.encoding import make_codec
 from repro.core.superstep import (
     WorkerState,
     build_batch_chunk_fn,
@@ -41,8 +42,8 @@ from repro.core.superstep import (
 )
 from repro.core.waiting_list import startup_assignment
 from repro.graphs.bitgraph import BitGraph, n_words
-from repro.problems.sequential import expand_frontier
-from repro.problems.vertex_cover import VCProblem, make_problem
+from repro.problems import base as problems_base
+from repro.problems.registry import DEFAULT_PROBLEM, get_problem
 
 
 @dataclasses.dataclass
@@ -70,18 +71,19 @@ class EngineResult:
 
 
 def _scatter_startup(
-    state: WorkerState, g: BitGraph, num_workers: int, tasks=None
+    state: WorkerState, problem, g: BitGraph, num_workers: int, tasks=None
 ) -> WorkerState:
     """BFS-split the root into ~P tasks and place them per Algorithm 7 order.
 
-    Every task — including overflow beyond the first ``num_workers`` when the
-    BFS split over-expands (``tasks`` may hold more than P records) — goes
-    through the same ``order`` permutation, so task i lands on worker
-    ``order[i mod P]``: the §3.5 equitable topology wraps instead of
-    degrading to raw round-robin.
+    ``problem`` is the :class:`~repro.problems.base.BranchingProblem` whose
+    host brancher drives the split.  Every task — including overflow beyond
+    the first ``num_workers`` when the BFS split over-expands (``tasks`` may
+    hold more than P records) — goes through the same ``order`` permutation,
+    so task i lands on worker ``order[i mod P]``: the §3.5 equitable topology
+    wraps instead of degrading to raw round-robin.
     """
     if tasks is None:
-        tasks = expand_frontier(g, num_tasks=num_workers)
+        tasks = problems_base.expand_frontier(problem, g, num_tasks=num_workers)
     order = startup_assignment(max_b=2, p=num_workers)  # 1-based worker ids
     masks = np.array(state.frontier.masks)
     sols = np.array(state.frontier.sols)
@@ -110,6 +112,7 @@ def solve(
     g: BitGraph,
     num_workers: int = 8,
     *,
+    problem=DEFAULT_PROBLEM,
     steps_per_round: int = 32,
     lanes: int = 1,
     policy_priority: bool = True,
@@ -126,7 +129,9 @@ def solve(
     capacity: Optional[int] = None,
     initial_state: Optional[WorkerState] = None,
 ) -> EngineResult:
-    """Solve minimum vertex cover with P workers (virtual or one-per-device).
+    """Solve one instance of ``problem`` with P workers (virtual or
+    one-per-device).  ``problem`` is a registry name (or a
+    :class:`~repro.problems.base.BranchingProblem` spec).
 
     ``chunk_rounds`` supersteps run per host sync (device-resident while
     loop); ``chunk_rounds=1`` reproduces the old per-round host loop for A/B
@@ -135,22 +140,25 @@ def solve(
     valve, enforced at chunk granularity (the run may overshoot it by at most
     ``chunk_rounds - 1`` supersteps).
     """
+    spec = get_problem(problem)
     W = n_words(g.n)
     cap = capacity or (4 * g.n + 8 * lanes)
-    initial_best = g.n + 1 if mode == "bnb" else (k + 1)
-    problem = make_problem(jnp.asarray(g.adj), g.n)
-    pad = (g.n * W) if codec == "basic" else 0  # §4.3 basic encoding payload
+    initial_best = problems_base.initial_bound(spec, g, mode, k)
+    data = problems_base.make_data(spec, g)
+    # §4.3 codec payload (validates the codec name against the registry)
+    pad = make_codec(codec, g.n, problem=spec).pad_words
 
     if initial_state is None:
         state = jax.vmap(lambda _: make_worker_state(cap, W, initial_best))(
             jnp.arange(num_workers)
         )
-        state = _scatter_startup(state, g, num_workers)
+        state = _scatter_startup(state, spec, g, num_workers)
     else:
         state = initial_state
 
     chunk_fn = build_chunk_fn(
-        problem,
+        spec,
+        data,
         num_workers=num_workers,
         steps_per_round=steps_per_round,
         lanes=lanes,
@@ -161,7 +169,7 @@ def solve(
         transfer_impl=transfer_impl,
         donate_k=donate_k,
         chunk_rounds=chunk_rounds,
-        fpt_bound=(k if mode == "fpt" else None),
+        fpt_bound=(spec.fpt_target(k) if mode == "fpt" else None),
         mesh=mesh,
     )
 
@@ -181,6 +189,7 @@ def solve(
     return _extract_result(
         host,
         0,
+        spec,
         g,
         rounds,
         wall,
@@ -231,23 +240,8 @@ def _bucket_instances(graphs, by_n: bool = False) -> dict:
     return buckets
 
 
-def _make_batch_problem(graphs, n_max: int, W: int) -> VCProblem:
-    """Pack B same-width instances into padded (B, n_max, W) problem tensors."""
-    B = len(graphs)
-    adj = np.zeros((B, n_max, W), np.uint32)
-    for b, g in enumerate(graphs):
-        adj[b, : g.n, :] = np.asarray(g.adj, np.uint32)
-    v = np.arange(n_max, dtype=np.int32)
-    return VCProblem(
-        n=jnp.asarray(np.array([g.n for g in graphs], np.int32)),
-        adj=jnp.asarray(adj),
-        word_idx=jnp.asarray(v // 32),
-        bit_idx=jnp.asarray((v % 32).astype(np.uint32)),
-    )
-
-
 def _make_batch_state(
-    graphs, num_workers: int, cap: int, W: int, initial_bests
+    problem, graphs, num_workers: int, cap: int, W: int, initial_bests
 ) -> WorkerState:
     """(B, P, ...) stacked worker state: each instance is initialized and
     §3.5-startup-scattered by exactly the solo-solve code path
@@ -258,13 +252,14 @@ def _make_batch_state(
         state = jax.vmap(lambda _: make_worker_state(cap, W, initial_best))(
             jnp.arange(num_workers)
         )
-        per_instance.append(_scatter_startup(state, g, num_workers))
+        per_instance.append(_scatter_startup(state, problem, g, num_workers))
     return jax.tree.map(lambda *xs: jnp.stack(xs), *per_instance)
 
 
 def _extract_result(
     host_state: dict,
     lane: int,
+    problem,
     g: BitGraph,
     rounds: int,
     wall_s: float,
@@ -274,15 +269,22 @@ def _extract_result(
     num_workers: int,
     packed_status: bool,
 ) -> EngineResult:
-    """Build one instance's EngineResult from a device-fetched batch state."""
+    """Build one instance's EngineResult from a device-fetched batch state.
+
+    ``best_size`` is reported in the problem's EXTERNAL objective
+    (``external_value``); "found nothing acceptable" is exactly "the internal
+    best never improved on the seed bound".
+    """
     local_bests = host_state["local_best_val"][lane]
     wbest = int(np.argmin(local_bests))
-    best_size = int(local_bests[wbest])
+    internal_best = int(local_bests[wbest])
+    found = internal_best < problems_base.initial_bound(problem, g, mode, k)
+    best_size = int(problem.external_value(internal_best))
     best_sol = host_state["best_sol"][lane][wbest]
-    if mode == "fpt" and best_size > k:
-        best_size, best_sol = -1, None
-    if best_size > g.n:
+    if not found:
         best_sol = None
+        if mode == "fpt":
+            best_size = -1
     # payload_words/transfer_rounds are replicated (derived from the shared
     # status table), so worker 0's view is the instance truth.
     payload_words = int(host_state["payload_words"][lane][0])
@@ -326,6 +328,7 @@ def solve_many(
     graphs,
     num_workers: int = 8,
     *,
+    problem=DEFAULT_PROBLEM,
     steps_per_round: int = 32,
     lanes: int = 1,
     policy_priority: bool = True,
@@ -341,7 +344,7 @@ def solve_many(
     capacity: Optional[int] = None,
     compact_threshold: float = 0.25,
 ) -> BatchResult:
-    """Solve B independent vertex-cover instances on ONE solve plane.
+    """Solve B independent instances of ``problem`` on ONE solve plane.
 
     The paper's center is cheap so one coordinator can drive huge worker
     pools; this extends the same amortization across *instances*: the batch
@@ -368,6 +371,7 @@ def solve_many(
     could drop tasks its batched lane keeps.  Pass ``capacity`` to pin an
     exact size.
     """
+    spec = get_problem(problem)
     graphs = list(graphs)
     B = len(graphs)
     if mode == "fpt":
@@ -387,25 +391,27 @@ def solve_many(
         n_max = max(g.n for g in bucket_graphs)
         bucket_record.append((W, n_max, list(idxs)))
         cap = capacity or (4 * n_max + 8 * lanes)
-        pad = (n_max * W) if codec == "basic" else 0
+        # §4.3 codec payload at the bucket's padded size (validates the name)
+        pad = make_codec(codec, n_max, problem=spec).pad_words
         initial_bests = [
-            (g.n + 1 if mode == "bnb" else ks[i] + 1)
+            problems_base.initial_bound(spec, g, mode, ks[i])
             for i, g in zip(idxs, bucket_graphs)
         ]
 
-        problems = _make_batch_problem(bucket_graphs, n_max, W)
+        datas = problems_base.make_batch_data(spec, bucket_graphs, n_max, W)
         state = _make_batch_state(
-            bucket_graphs, num_workers, cap, W, initial_bests
+            spec, bucket_graphs, num_workers, cap, W, initial_bests
         )
         fpt_bounds = (
-            jnp.asarray(np.array([ks[i] for i in idxs], np.int32))
+            jnp.asarray(np.array([spec.fpt_target(ks[i]) for i in idxs], np.int32))
             if mode == "fpt"
             else None
         )
 
-        def make_chunk(probs, bounds):
+        def make_chunk(data_b, bounds):
             return build_batch_chunk_fn(
-                probs,
+                spec,
+                data_b,
                 steps_per_round=steps_per_round,
                 lanes=lanes,
                 policy_priority=policy_priority,
@@ -418,7 +424,7 @@ def solve_many(
                 fpt_bounds=bounds,
             )
 
-        chunk_fn = make_chunk(problems, fpt_bounds)
+        chunk_fn = make_chunk(datas, fpt_bounds)
         lanes_orig = np.array(idxs)  # lane -> original instance index
         done = jnp.zeros((len(idxs),), bool)
         rounds_done = np.zeros(B, np.int64)
@@ -451,17 +457,12 @@ def solve_many(
                         results[oi] = (lane, host, int(rounds_done[oi]))
                 sel = np.concatenate([live, fillers]).astype(np.int64)
                 state = jax.tree.map(lambda x: x[sel], state)
-                problems = VCProblem(
-                    n=problems.n[sel],
-                    adj=problems.adj[sel],
-                    word_idx=problems.word_idx,
-                    bit_idx=problems.bit_idx,
-                )
+                datas = problems_base.slice_instances(datas, sel)
                 if fpt_bounds is not None:
                     fpt_bounds = fpt_bounds[sel]
                 done = jnp.asarray(done_h[sel])
                 lanes_orig = lanes_orig[sel]
-                chunk_fn = make_chunk(problems, fpt_bounds)
+                chunk_fn = make_chunk(datas, fpt_bounds)
                 compactions += 1
 
         host = _fetch_batch_state(state)
@@ -477,6 +478,7 @@ def solve_many(
             results[oi] = _extract_result(
                 host_i,
                 lane,
+                spec,
                 graphs[oi],
                 rounds_i,
                 per_wall,

@@ -61,13 +61,7 @@ from repro.core.frontier import (
     pop_k_shallowest,
     push_many,
 )
-from repro.problems.vertex_cover import (
-    VCProblem,
-    branch_once,
-    degrees,
-    lower_bound,
-    popcount,
-)
+from repro.problems.base import DATA_IN_AXES, BranchingProblem, ProblemData
 
 
 def _shard_map(body, *, mesh, in_specs, out_specs):
@@ -122,37 +116,53 @@ def make_worker_state(capacity: int, W: int, initial_best: int) -> WorkerState:
 # -- phase 1: exploration ------------------------------------------------------
 
 
-def _explore_one_round(problem: VCProblem, state: WorkerState, lanes: int):
-    """Pop up to ``lanes`` deepest tasks, expand each, push children."""
+def _explore_one_round(
+    problem: BranchingProblem, data: ProblemData, state: WorkerState, lanes: int
+):
+    """Pop up to ``lanes`` deepest tasks, expand each, push children.
+
+    Problem-generic: the plugin supplies ``task_bound`` (admissible bound on
+    the internal objective, gates expansion), ``branch_once`` (one node
+    expansion -> :class:`BranchStep`) and ``child_bound`` (cheap birth-time
+    prune).  The engine always minimizes internal values.
+    """
     f, masks, sols, depths, valid = pop_deepest(state.frontier, lanes)
 
-    sol_sizes = jax.vmap(popcount)(sols)  # (L,)
-    degs = jax.vmap(lambda m: degrees(problem, m))(masks)  # (L, n)
-    lbs = jax.vmap(lower_bound)(degs)  # (L,)
-    not_pruned = valid & (sol_sizes + lbs < state.best_val)
+    bounds = jax.vmap(lambda m, s: problem.task_bound(data, m, s))(masks, sols)
+    not_pruned = valid & (bounds < state.best_val)
 
-    res = jax.vmap(lambda m, s: branch_once(problem, m, s))(masks, sols)
+    res = jax.vmap(lambda m, s: problem.branch_once(data, m, s))(masks, sols)
 
     # terminal candidates -> best update (paper: handleSolution + bestval)
-    term = not_pruned & res.is_terminal & (res.terminal_size < state.best_val)
-    term_size = jnp.where(term, res.terminal_size, jnp.int32(1 << 30))
-    li = jnp.argmin(term_size)
-    found_size = term_size[li]  # 1<<30 when no lane found a terminal
+    term = not_pruned & res.is_terminal & (res.terminal_value < state.best_val)
+    term_val = jnp.where(term, res.terminal_value, jnp.int32(1 << 30))
+    li = jnp.argmin(term_val)
+    found_val = term_val[li]  # 1<<30 when no lane found a terminal
     # local best only improves with terminals THIS worker found (its stored
     # solution must actually achieve local_best_val); the global view may also
     # shrink via the pmin in the communication phase.
     new_sol = jnp.where(
-        found_size < state.local_best_val, res.terminal_sol[li], state.best_sol
+        found_val < state.local_best_val, res.terminal_sol[li], state.best_sol
     )
-    new_local = jnp.minimum(state.local_best_val, found_size)
-    new_best = jnp.minimum(state.best_val, found_size)
+    new_local = jnp.minimum(state.local_best_val, found_val)
+    new_best = jnp.minimum(state.best_val, found_val)
 
-    # children push: [left_0..left_L, right_0..right_L], pruned-at-birth if
-    # their partial solution already >= best (host reference does the same).
+    # children push: [left_0..left_L, right_0..right_L], pruned-at-birth when
+    # the cheap bound says they cannot beat best (host reference does the same).
     expandable = not_pruned & ~res.is_terminal
     cdepth = depths + 1
-    lvalid = expandable & (jax.vmap(popcount)(res.left_sol) < new_best)
-    rvalid = expandable & (jax.vmap(popcount)(res.right_sol) < new_best)
+    lvalid = expandable & (
+        jax.vmap(lambda m, s: problem.child_bound(data, m, s))(
+            res.left_mask, res.left_sol
+        )
+        < new_best
+    )
+    rvalid = expandable & (
+        jax.vmap(lambda m, s: problem.child_bound(data, m, s))(
+            res.right_mask, res.right_sol
+        )
+        < new_best
+    )
     all_masks = jnp.concatenate([res.left_mask, res.right_mask], axis=0)
     all_sols = jnp.concatenate([res.left_sol, res.right_sol], axis=0)
     all_depths = jnp.concatenate([cdepth, cdepth], axis=0)
@@ -169,10 +179,14 @@ def _explore_one_round(problem: VCProblem, state: WorkerState, lanes: int):
 
 
 def explore_phase(
-    problem: VCProblem, state: WorkerState, steps: int, lanes: int
+    problem: BranchingProblem,
+    data: ProblemData,
+    state: WorkerState,
+    steps: int,
+    lanes: int,
 ) -> WorkerState:
     def body(_, s):
-        return _explore_one_round(problem, s, lanes)
+        return _explore_one_round(problem, data, s, lanes)
 
     return jax.lax.fori_loop(0, steps, body, state)
 
@@ -239,7 +253,8 @@ def match_idle_to_donors(
 
 
 def superstep(
-    problem: VCProblem,
+    problem: BranchingProblem,
+    data: ProblemData,
     state: WorkerState,
     *,
     axis_name: str,
@@ -285,10 +300,12 @@ def superstep(
         # guarantee (a matched idle worker ALWAYS receives work) breaks
         raise ValueError(f"donate_k must be >= 1, got {donate_k}")
     W = state.best_sol.shape[0]
+    # the frontier's native task record: (mask, sol, depth) — problem-
+    # independent by construction (every plugin uses the packed-state layout)
     rec_words = 2 * W + 1 + transfer_pad_words
 
     # 1. explore
-    state = explore_phase(problem, state, steps_per_round, lanes)
+    state = explore_phase(problem, data, state, steps_per_round, lanes)
 
     # 2. control plane through the "center" + 5. best-value broadcast
     pending = state.frontier.pending()
@@ -394,7 +411,8 @@ def superstep(
 
 
 def build_superstep_fn(
-    problem: VCProblem,
+    problem: BranchingProblem,
+    data: ProblemData,
     *,
     num_workers: int,
     steps_per_round: int,
@@ -420,6 +438,7 @@ def build_superstep_fn(
     step = functools.partial(
         superstep,
         problem,
+        data,
         axis_name=axis_name,
         steps_per_round=steps_per_round,
         lanes=lanes,
@@ -457,15 +476,13 @@ def build_superstep_fn(
 # -- the instance axis ---------------------------------------------------------
 #
 # `solve_many` stacks B independent instances in front of the worker axis:
-# state leaves become (B, P, ...) and the problem gains per-instance leaves
-# (adj (B, n, W), n (B,)) while word_idx/bit_idx stay shared.  The collectives
-# inside `superstep` are bound to the WORKER axis name, so vmapping the whole
-# worker-mapped step over an unnamed instance axis keeps every all-gather /
-# psum / pmin confined to one instance: donation cannot cross the instance
-# axis by construction (tested in tests/test_solve_many.py).
-
-# vmap axis spec for a batched VCProblem: per-instance n/adj, shared bit maps
-PROBLEM_IN_AXES = VCProblem(n=0, adj=0, word_idx=None, bit_idx=None)
+# state leaves become (B, P, ...) and the problem data gains per-instance
+# leaves (adj (B, n, W), n (B,)) while word_idx/bit_idx stay shared
+# (`problems.base.DATA_IN_AXES`).  The collectives inside `superstep` are
+# bound to the WORKER axis name, so vmapping the whole worker-mapped step
+# over an unnamed instance axis keeps every all-gather / psum / pmin confined
+# to one instance: donation cannot cross the instance axis by construction
+# (tested in tests/test_solve_many.py).
 
 
 def _expand_like(flags: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
@@ -474,7 +491,8 @@ def _expand_like(flags: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
 
 
 def build_batch_superstep_fn(
-    problems: VCProblem,
+    problem: BranchingProblem,
+    datas: ProblemData,
     *,
     steps_per_round: int,
     lanes: int,
@@ -488,7 +506,7 @@ def build_batch_superstep_fn(
 ):
     """Jitted ``state -> (state, done)`` over (B, P, ...) stacked state.
 
-    ``problems`` is a batched :class:`VCProblem` (leading instance axis on
+    ``datas`` is a batched :class:`ProblemData` (leading instance axis on
     ``n``/``adj``; ``word_idx``/``bit_idx`` shared).  ``done`` is (B,) bool —
     exact PER-INSTANCE quiescence.  One superstep always runs for every
     instance (no freezing); use :func:`build_batch_chunk_fn` for solve loops,
@@ -496,6 +514,7 @@ def build_batch_superstep_fn(
     """
     step = functools.partial(
         superstep,
+        problem,
         axis_name=axis_name,
         steps_per_round=steps_per_round,
         lanes=lanes,
@@ -507,22 +526,23 @@ def build_batch_superstep_fn(
         donate_k=donate_k,
     )
 
-    def one_instance(problem, state):
+    def one_instance(data, state):
         state, done = jax.vmap(
-            lambda s: step(problem, s), axis_name=axis_name
+            lambda s: step(data, s), axis_name=axis_name
         )(state)
         return state, done.all()
 
-    bstep = jax.vmap(one_instance, in_axes=(PROBLEM_IN_AXES, 0))
+    bstep = jax.vmap(one_instance, in_axes=(DATA_IN_AXES, 0))
 
     def run(state):
-        return bstep(problems, state)
+        return bstep(datas, state)
 
     return jax.jit(run)
 
 
 def build_batch_chunk_fn(
-    problems: VCProblem,
+    problem: BranchingProblem,
+    datas: ProblemData,
     *,
     steps_per_round: int,
     lanes: int,
@@ -543,7 +563,8 @@ def build_batch_chunk_fn(
     * ``state``        (B, P, ...) stacked worker state;
     * ``done``         (B,) bool carried ACROSS chunks — instances that
       finished (quiescent, or FPT bound hit when ``fpt_bounds`` (B,) int32 is
-      given) become no-op lanes: their state is frozen by a select, so stats
+      given; bounds are INTERNAL targets, ``problem.fpt_target(k)``) become
+      no-op lanes: their state is frozen by a select, so stats
       stay bit-identical to a solo run while live instances keep stepping;
     * ``rounds_delta`` (B,) int32 supersteps each instance actually ran this
       chunk (0 for already-finished lanes);
@@ -558,7 +579,8 @@ def build_batch_chunk_fn(
     if chunk_rounds < 1:
         raise ValueError(f"chunk_rounds must be >= 1, got {chunk_rounds}")
     sstep = build_batch_superstep_fn(
-        problems,
+        problem,
+        datas,
         steps_per_round=steps_per_round,
         lanes=lanes,
         policy_priority=policy_priority,
@@ -607,7 +629,8 @@ def build_batch_chunk_fn(
 
 
 def build_chunk_fn(
-    problem: VCProblem,
+    problem: BranchingProblem,
+    data: ProblemData,
     *,
     num_workers: int,
     steps_per_round: int,
@@ -644,6 +667,7 @@ def build_chunk_fn(
     step = functools.partial(
         superstep,
         problem,
+        data,
         axis_name=axis_name,
         steps_per_round=steps_per_round,
         lanes=lanes,

@@ -64,6 +64,14 @@ def single_bit(v: int, W: int) -> np.ndarray:
     return out
 
 
+def complement(g: "BitGraph") -> "BitGraph":
+    """The complement graph (no self-loops): uv in E' iff u != v and uv not
+    in E.  The max-clique <-> independent-set reduction runs through this."""
+    dense = g.to_dense()
+    comp = ~dense & ~np.eye(g.n, dtype=bool)
+    return BitGraph(n=g.n, adj=pack_masks(comp))
+
+
 @dataclasses.dataclass(frozen=True)
 class BitGraph:
     """Immutable packed-adjacency graph.

@@ -33,15 +33,18 @@ from repro.graphs.bitgraph import n_words
 from repro.graphs.generators import erdos_renyi
 from repro.launch.analysis import collective_bytes, roofline
 from repro.launch.mesh import make_mesh_compat
-from repro.problems.vertex_cover import make_problem
+from repro.problems.base import make_data
+from repro.problems.registry import get_problem
 
 
 def lower_engine(n: int, workers: int, *, packed_status, skip_empty_transfer,
                  transfer_impl="gather", steps_per_round=32, lanes=1,
-                 codec_pad=0, chunked=False, chunk_rounds=16):
+                 codec_pad=0, chunked=False, chunk_rounds=16,
+                 problem="vertex_cover"):
     mesh = make_mesh_compat((workers,), ("workers",))
     g = erdos_renyi(n, 4.0 / (n - 1), 0)
-    problem = make_problem(jnp.asarray(g.adj), g.n)
+    spec = get_problem(problem)
+    data = make_data(spec, g)
     W = n_words(n)
     cap = 4 * n + 8 * lanes
     kwargs = dict(
@@ -55,9 +58,9 @@ def lower_engine(n: int, workers: int, *, packed_status, skip_empty_transfer,
         mesh=mesh,
     )
     if chunked:
-        fn = build_chunk_fn(problem, chunk_rounds=chunk_rounds, **kwargs)
+        fn = build_chunk_fn(spec, data, chunk_rounds=chunk_rounds, **kwargs)
     else:
-        fn = build_superstep_fn(problem, **kwargs)
+        fn = build_superstep_fn(spec, data, **kwargs)
     state = jax.eval_shape(
         lambda: jax.vmap(lambda _: make_worker_state(cap, W, n + 1))(
             jnp.arange(workers)

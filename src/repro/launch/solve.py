@@ -1,10 +1,14 @@
-"""Vertex-cover solver driver — the paper's own workload, three engines.
+"""Branching-problem solver driver — any registry problem, four engines.
 
+  --problem NAME     which branching problem (vertex_cover, max_clique, mis;
+                     see repro.problems.registry)
   --engine spmd      the TPU-adapted superstep engine (vmap of P virtual
                      workers on CPU; one worker per device with --use-mesh)
   --engine protocol  the faithful asynchronous MPI-protocol simulator
-  --engine central   the fully-centralized baseline (Abu-Khzam 2006)
-  --engine seq       the sequential reference
+                     (vertex-cover only)
+  --engine central   the fully-centralized baseline (Abu-Khzam 2006;
+                     vertex-cover only)
+  --engine seq       the problem's sequential reference
 
 Multi-instance mode (the batched solve plane, `engine.solve_many`): pass
 several DIMACS files and/or `--batch B` to pack B instances onto one plane —
@@ -13,6 +17,8 @@ one compiled executable and one host sync per chunk for the whole batch.
 Usage:
   PYTHONPATH=src python -m repro.launch.solve --graph gnp --n 60 --p 0.1 \
       --engine spmd --workers 8
+  PYTHONPATH=src python -m repro.launch.solve --graph gnp --n 40 \
+      --problem max_clique --workers 8
   PYTHONPATH=src python -m repro.launch.solve --graph phat --n 120 \
       --density 0.4 --engine protocol --workers 16 --codec basic
   PYTHONPATH=src python -m repro.launch.solve --graph dimacs \
@@ -26,7 +32,9 @@ import argparse
 import sys
 import time
 
+from repro.core.encoding import make_codec
 from repro.graphs.generators import erdos_renyi, p_hat_like, parse_dimacs
+from repro.problems.registry import get_problem
 
 
 def build_graph(args, seed=None):
@@ -78,8 +86,13 @@ def main():
     ap.add_argument(
         "--engine", default="spmd", choices=["spmd", "protocol", "central", "seq"]
     )
+    ap.add_argument("--problem", default="vertex_cover",
+                    help="branching problem from the registry "
+                         "(vertex_cover, max_clique, mis, ...)")
     ap.add_argument("--workers", type=int, default=8)
-    ap.add_argument("--codec", default="optimized", choices=["optimized", "basic"])
+    ap.add_argument("--codec", default="optimized",
+                    help="task codec: optimized (n-bit masks) or basic "
+                         "(adjacency payload, §4.3)")
     ap.add_argument("--policy", default="priority", choices=["priority", "random"])
     ap.add_argument("--steps-per-round", type=int, default=32)
     ap.add_argument("--lanes", type=int, default=1)
@@ -95,6 +108,20 @@ def main():
     ap.add_argument("--k", type=int, default=None)
     args = ap.parse_args()
 
+    # validate names through the registries up front: a typo'd --problem or
+    # --codec dies with the list of known names, not a deep KeyError (the
+    # same fix pattern as the benchmarks.run name validation)
+    try:
+        spec = get_problem(args.problem)
+        make_codec(args.codec, 1)
+    except ValueError as e:
+        raise SystemExit(f"error: {e}")
+    if args.engine in ("protocol", "central") and spec.name != "vertex_cover":
+        raise SystemExit(
+            f"--engine {args.engine} simulates the paper's vertex-cover "
+            f"protocol only; use --engine spmd or seq for {spec.name}"
+        )
+
     batch_graphs, batch_labels = build_graphs(args)
     if batch_graphs:
         if args.engine != "spmd":
@@ -106,11 +133,12 @@ def main():
             )
         from repro.core.engine import solve_many
 
-        print(f"[solve] batch of {len(batch_graphs)} instances, "
-              f"workers/instance={args.workers}")
+        print(f"[solve] batch of {len(batch_graphs)} instances "
+              f"[{spec.name}], workers/instance={args.workers}")
         res = solve_many(
             batch_graphs,
             num_workers=args.workers,
+            problem=spec,
             steps_per_round=args.steps_per_round,
             lanes=args.lanes,
             policy_priority=(args.policy == "priority"),
@@ -122,7 +150,7 @@ def main():
             k=args.k,
         )
         for label, r in zip(batch_labels, res.results):
-            print(f"[solve]   {label}: mvc={r.best_size} rounds={r.rounds} "
+            print(f"[solve]   {label}: best={r.best_size} rounds={r.rounds} "
                   f"nodes={r.nodes_expanded} transfers={r.tasks_transferred}")
         n_buckets = len(res.buckets)
         print(f"[solve] batch done: {len(batch_graphs)} instances in "
@@ -132,15 +160,14 @@ def main():
         return
 
     g = build_graph(args)
-    print(f"[solve] graph n={g.n} m={g.num_edges} engine={args.engine}")
+    print(f"[solve] graph n={g.n} m={g.num_edges} engine={args.engine} "
+          f"problem={spec.name}")
     t0 = time.perf_counter()
 
     if args.engine == "seq":
-        from repro.problems.sequential import solve_sequential
-
-        best, sol, stats = solve_sequential(g, mode=args.mode, k=args.k)
+        best, sol, stats = spec.sequential(g, mode=args.mode, k=args.k)
         dt = time.perf_counter() - t0
-        print(f"[solve] mvc={best} nodes={stats.nodes} {dt:.2f}s")
+        print(f"[solve] best={best} nodes={stats.nodes} {dt:.2f}s")
         return
 
     if args.engine == "protocol":
@@ -185,6 +212,7 @@ def main():
     res = solve(
         g,
         num_workers=args.workers,
+        problem=spec,
         steps_per_round=args.steps_per_round,
         lanes=args.lanes,
         policy_priority=(args.policy == "priority"),
@@ -197,7 +225,7 @@ def main():
         mesh=mesh,
     )
     print(
-        f"[solve] mvc={res.best_size} rounds={res.rounds} "
+        f"[solve] best={res.best_size} rounds={res.rounds} "
         f"nodes={res.nodes_expanded} transfers={res.tasks_transferred} "
         f"overflow={res.overflow} wall={res.wall_s:.2f}s "
         f"control_B/round={res.control_bytes_per_round} "

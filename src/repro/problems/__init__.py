@@ -1,10 +1,19 @@
-"""Branching problems (plug-ins for the paper's Algorithm 1 / 2 structure)."""
+"""Branching problems (plug-ins for the paper's Algorithm 1 / 2 structure).
+
+The contract is :class:`repro.problems.base.BranchingProblem`; concrete
+workloads (``vertex_cover``, ``max_clique``, ``mis``) register in
+:mod:`repro.problems.registry`, and :mod:`repro.problems.sequential` holds
+the host-side ground-truth references.
+"""
 
 from repro.problems.sequential import (
     SeqStats,
     reduce_instance,
     branch_once,
+    branch_once_clique,
     solve_sequential,
+    solve_sequential_max_clique,
+    solve_sequential_mis,
     expand_frontier,
 )
 
@@ -12,6 +21,9 @@ __all__ = [
     "SeqStats",
     "reduce_instance",
     "branch_once",
+    "branch_once_clique",
     "solve_sequential",
+    "solve_sequential_max_clique",
+    "solve_sequential_mis",
     "expand_frontier",
 ]

@@ -1,0 +1,65 @@
+"""Max-clique plugin: a native candidate-set brancher on the generic plane.
+
+Task state (paper-optimized encoding, unchanged layout): ``mask`` is the
+candidate set P (vertices adjacent to everything already picked), ``sol`` is
+the clique R being grown.  One expansion branches on a maximum-degree
+candidate u — either u joins (candidates shrink to P ∩ N(u)) or u is
+discarded — and a task is terminal when P is empty.
+
+The engine minimizes, so the internal objective is ``-|R|``; the admissible
+bound ``-(|R| + |P|)`` (every candidate could, at best, join) prunes both
+popped tasks and freshly-born children.  ``external_value`` flips the sign
+back for reporting.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.problems import sequential
+from repro.problems.base import (
+    BranchingProblem,
+    BranchStep,
+    ProblemData,
+    degrees,
+    popcount,
+    single_bit,
+)
+
+
+def branch_once(data: ProblemData, mask, sol) -> BranchStep:
+    """Branch on a maximum-degree candidate (degree within P, ties lowest)."""
+    W = data.adj.shape[1]
+    deg = degrees(data, mask)
+    u = jnp.argmax(deg).astype(jnp.int32)
+    u_bit = single_bit(u, W)
+    nb = data.adj[u] & mask
+    return BranchStep(
+        left_mask=nb,  # u joins: only its neighbours stay candidates
+        left_sol=sol | u_bit,
+        right_mask=mask & ~u_bit,  # u discarded
+        right_sol=sol,
+        is_terminal=popcount(mask) == 0,
+        terminal_sol=sol,
+        terminal_value=-popcount(sol),
+    )
+
+
+def bound(data: ProblemData, mask, sol) -> jnp.ndarray:
+    """-(|R| + |P|): no completion can beat adding every candidate."""
+    return -(popcount(sol) + popcount(mask))
+
+
+SPEC = BranchingProblem(
+    name="max_clique",
+    objective="maximize |clique|",
+    branch_once=branch_once,
+    task_bound=bound,
+    child_bound=bound,
+    bnb_bound=lambda g: 1,  # just worse than the empty clique (value 0)
+    external_value=lambda v: -v,
+    fpt_target=lambda k: -k,
+    branch_once_host=sequential.branch_once_clique,
+    sequential=sequential.solve_sequential_max_clique,
+    verify=sequential.verify_clique,
+)

@@ -1,0 +1,58 @@
+"""Problem registry: name -> :class:`~repro.problems.base.BranchingProblem`.
+
+The engine, CLIs and serving plane resolve problems exclusively through
+:func:`get_problem`, so adding a workload is: write a plugin module, add one
+line here (or call :func:`register` at import time).
+"""
+
+from __future__ import annotations
+
+from repro.problems import max_clique, mis, vertex_cover
+from repro.problems.base import BranchingProblem
+
+# the paper's own workload; core modules take this as their default
+DEFAULT_PROBLEM = "vertex_cover"
+
+REGISTRY: dict = {
+    spec.name: spec
+    for spec in (vertex_cover.SPEC, max_clique.SPEC, mis.SPEC)
+}
+
+ALIASES = {
+    "vc": "vertex_cover",
+    "min_vertex_cover": "vertex_cover",
+    "clique": "max_clique",
+    "maximum_independent_set": "mis",
+    "independent_set": "mis",
+}
+
+
+def register(spec: BranchingProblem) -> BranchingProblem:
+    """Add a plugin to the registry (idempotent for the same object)."""
+    have = REGISTRY.get(spec.name)
+    if have is not None and have is not spec:
+        raise ValueError(f"problem {spec.name!r} already registered")
+    REGISTRY[spec.name] = spec
+    return spec
+
+
+def known_problems() -> list:
+    return sorted(REGISTRY)
+
+
+def get_problem(name) -> BranchingProblem:
+    """Resolve a problem by name (or pass a spec through unchanged).
+
+    Raises a ``ValueError`` that lists the known names — the CLIs surface it
+    verbatim, so a typo'd ``--problem`` tells you what IS available.
+    """
+    if isinstance(name, BranchingProblem):
+        return name
+    key = ALIASES.get(name, name)
+    if key not in REGISTRY:
+        raise ValueError(
+            f"unknown problem {name!r}; known problems: "
+            f"{', '.join(known_problems())} "
+            f"(aliases: {', '.join(sorted(ALIASES))})"
+        )
+    return REGISTRY[key]

@@ -1,9 +1,12 @@
-"""Device-side (jnp) vertex-cover branching ops on packed bitsets.
+"""Vertex-cover plugin: the paper's own workload on the generic solve plane.
 
-This is the jit/vmap-compatible twin of :mod:`repro.problems.sequential`.
-Every function operates on tasks in the paper's *optimized encoding* (§4.3):
-packed ``uint32[W]`` masks over the ORIGINAL vertex set; the adjacency bitset
-``adj (n, W)`` is loaded once per worker and never re-serialized.
+This is the jit/vmap-compatible twin of the host reference in
+:mod:`repro.problems.sequential`.  Every function operates on tasks in the
+paper's *optimized encoding* (§4.3): packed ``uint32[W]`` masks over the
+ORIGINAL vertex set; the adjacency bitset ``adj (n, W)`` is loaded once per
+worker and never re-serialized.  The packed-bitset primitives themselves are
+problem-agnostic and live in :mod:`repro.problems.base` (re-exported here
+for compatibility).
 
 All control flow is `jax.lax` (while_loop / select) so the ops compose into
 the SPMD superstep engine (`repro.core.superstep`) and into the Pallas
@@ -12,92 +15,46 @@ Semantics match the host reference exactly (tests assert equality), with one
 deliberate exception: rule application order inside `reduce_instance` may pick
 a different (equally valid) vertex — both preserve at least one optimal
 cover, so terminal best values are identical.
+
+``SPEC`` at the bottom is the :class:`~repro.problems.base.BranchingProblem`
+plugin registered as ``"vertex_cover"``.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-WORD_BITS = 32
+from repro.problems import sequential
+from repro.problems.base import (  # noqa: F401  (re-exported public API)
+    WORD_BITS,
+    BranchingProblem,
+    BranchStep,
+    ProblemData,
+    degrees,
+    edge_count,
+    in_mask,
+    pack_bits,
+    popcount,
+    single_bit,
+    unpack_bits,
+)
+
+# the pre-plugin names, kept for callers and tests
+VCProblem = ProblemData
+BranchResult = BranchStep
 
 
-class VCProblem(NamedTuple):
-    """Static per-instance device data (replicated on every worker)."""
-
-    n: jnp.ndarray  # () int32 -- number of vertices
-    adj: jnp.ndarray  # (n, W) uint32 packed adjacency
-    word_idx: jnp.ndarray  # (n,) int32 -- v // 32
-    bit_idx: jnp.ndarray  # (n,) uint32 -- v % 32
-
-
-def make_problem(adj, n: int) -> VCProblem:
+def make_problem(adj, n: int) -> ProblemData:
     v = jnp.arange(adj.shape[0], dtype=jnp.int32)
-    return VCProblem(
+    return ProblemData(
         n=jnp.int32(n),
         adj=jnp.asarray(adj, dtype=jnp.uint32),
         word_idx=v // WORD_BITS,
         bit_idx=(v % WORD_BITS).astype(jnp.uint32),
     )
-
-
-# -- packed-bitset primitives -------------------------------------------------
-
-
-def popcount(words: jnp.ndarray) -> jnp.ndarray:
-    """Popcount summed over the trailing word axis -> int32."""
-    return jax.lax.population_count(words).astype(jnp.int32).sum(axis=-1)
-
-
-def unpack_bits(words: jnp.ndarray, n: int) -> jnp.ndarray:
-    """(..., W) uint32 -> (..., n) bool."""
-    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
-    bits = (words[..., :, None] >> shifts) & jnp.uint32(1)
-    return bits.reshape(*words.shape[:-1], -1)[..., :n].astype(bool)
-
-
-def pack_bits(bits: jnp.ndarray, W: int) -> jnp.ndarray:
-    """(..., n) bool -> (..., W) uint32 (LSB-first)."""
-    n = bits.shape[-1]
-    pad = W * WORD_BITS - n
-    if pad:
-        bits = jnp.concatenate(
-            [bits, jnp.zeros((*bits.shape[:-1], pad), dtype=bool)], axis=-1
-        )
-    b = bits.reshape(*bits.shape[:-1], W, WORD_BITS).astype(jnp.uint32)
-    weights = jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32)
-    return (b * weights).sum(axis=-1).astype(jnp.uint32)
-
-
-def single_bit(v: jnp.ndarray, W: int) -> jnp.ndarray:
-    """Packed mask with only bit ``v`` set (v: () int32)."""
-    word = v // WORD_BITS
-    bit = (v % WORD_BITS).astype(jnp.uint32)
-    return jnp.where(
-        jnp.arange(W) == word, jnp.uint32(1) << bit, jnp.uint32(0)
-    ).astype(jnp.uint32)
-
-
-def in_mask(problem: VCProblem, mask: jnp.ndarray) -> jnp.ndarray:
-    """(n,) bool: vertex v inside the packed mask."""
-    return ((mask[problem.word_idx] >> problem.bit_idx) & 1).astype(bool)
-
-
-def degrees(problem: VCProblem, mask: jnp.ndarray) -> jnp.ndarray:
-    """Induced-subgraph degrees; -1 outside the mask.  (n,) int32.
-
-    This is the B&B hot spot the Pallas kernel accelerates (one AND + popcount
-    per adjacency row per task).
-    """
-    deg = popcount(problem.adj & mask[None, :])
-    return jnp.where(in_mask(problem, mask), deg, jnp.int32(-1))
-
-
-def edge_count(deg: jnp.ndarray) -> jnp.ndarray:
-    return jnp.maximum(deg, 0).sum() // 2
 
 
 def lower_bound(deg: jnp.ndarray) -> jnp.ndarray:
@@ -116,7 +73,7 @@ def _first_vertex(cond: jnp.ndarray, n_total: int) -> jnp.ndarray:
     return idx.min()
 
 
-def _reduce_step(problem: VCProblem, mask, sol_mask):
+def _reduce_step(problem: ProblemData, mask, sol_mask):
     """One reduction sweep.  Returns (mask, sol_mask, changed)."""
     n_total, W = problem.adj.shape
     deg = degrees(problem, mask)
@@ -160,7 +117,7 @@ def _reduce_step(problem: VCProblem, mask, sol_mask):
     return new_mask, new_sol, changed
 
 
-def reduce_instance(problem: VCProblem, mask, sol_mask):
+def reduce_instance(problem: ProblemData, mask, sol_mask):
     """Apply rules 1-3 to fixpoint (bounded while_loop)."""
 
     def cond(state):
@@ -184,17 +141,7 @@ def reduce_instance(problem: VCProblem, mask, sol_mask):
 # -- branching (paper Algorithm 8 lines 7-11) ----------------------------------
 
 
-class BranchResult(NamedTuple):
-    left_mask: jnp.ndarray
-    left_sol: jnp.ndarray
-    right_mask: jnp.ndarray
-    right_sol: jnp.ndarray
-    is_terminal: jnp.ndarray  # () bool -- reduced instance has no edges
-    terminal_sol: jnp.ndarray  # (W,) uint32 -- full cover if is_terminal
-    terminal_size: jnp.ndarray  # () int32
-
-
-def branch_once(problem: VCProblem, mask, sol_mask) -> BranchResult:
+def branch_once(problem: ProblemData, mask, sol_mask) -> BranchStep:
     """Reduce, then branch on a maximum-degree vertex u:
     left = (G-u, S+{u}), right = (G-N[u], S+N(u)).  Matches Alg. 8/9."""
     W = problem.adj.shape[1]
@@ -205,15 +152,25 @@ def branch_once(problem: VCProblem, mask, sol_mask) -> BranchResult:
     u = jnp.argmax(deg).astype(jnp.int32)
     u_bit = single_bit(u, W)
     nb = problem.adj[u] & mask
-    return BranchResult(
+    return BranchStep(
         left_mask=mask & ~u_bit,
         left_sol=sol_mask | u_bit,
         right_mask=mask & ~(nb | u_bit),
         right_sol=sol_mask | nb,
         is_terminal=is_terminal,
         terminal_sol=sol_mask,
-        terminal_size=popcount(sol_mask),
+        terminal_value=popcount(sol_mask),
     )
+
+
+def task_bound(problem: ProblemData, mask, sol_mask) -> jnp.ndarray:
+    """|S| + ceil(E/maxdeg): admissible lower bound on the final cover."""
+    return popcount(sol_mask) + lower_bound(degrees(problem, mask))
+
+
+def child_bound(problem: ProblemData, mask, sol_mask) -> jnp.ndarray:
+    """Cheap birth-time bound: the partial cover can only grow."""
+    return popcount(sol_mask)
 
 
 @functools.partial(jax.jit, static_argnames=("n",))
@@ -225,3 +182,16 @@ def verify_cover(adj, sol_mask, n: int) -> jnp.ndarray:
     uncovered_rows = adj & ~sol_mask[None, :]
     cnt = popcount(uncovered_rows)
     return (jnp.where(inc, 0, cnt).sum() == 0)
+
+
+SPEC = BranchingProblem(
+    name="vertex_cover",
+    objective="minimize |cover|",
+    branch_once=branch_once,
+    task_bound=task_bound,
+    child_bound=child_bound,
+    bnb_bound=lambda g: g.n + 1,
+    branch_once_host=sequential.branch_once,
+    sequential=sequential.solve_sequential,
+    verify=sequential.verify_cover,
+)

@@ -111,21 +111,22 @@ def rebalance(state: BalancerState) -> int:
 
 @dataclasses.dataclass
 class SolveBatcher:
-    """Admit a stream of vertex-cover solve requests into fixed-size
+    """Admit a stream of branching-problem solve requests into fixed-size
     ``engine.solve_many`` batches.
 
     This is the serving front of the batched solve plane: a request's
     "replica" is one of the B lanes of a solve batch, so the continuous-
-    batching occupancy machinery above applies unchanged — each (W) packing
-    bucket is a :class:`RequestBatch` whose ``capacity`` is the plane's batch
-    size, and ``admit()`` (largest-work-first) decides which queued instances
-    fill the free lanes, so big instances never starve behind a stream of
-    small ones.  Queue entries are ``(work, -seq)`` pairs — the work
-    estimate is the instance size, the same §3.2 single-integer metadata the
-    solver's center runs on; the negated sequence makes equal-size requests
-    drain FIFO under the descending sort.  Buckets follow the solve plane's
-    packing rule (one batch never mixes W; `solve_many` pads n within a
-    bucket).
+    batching occupancy machinery above applies unchanged — each
+    ``(problem, W)`` packing bucket is a :class:`RequestBatch` whose
+    ``capacity`` is the plane's batch size, and ``admit()``
+    (largest-work-first) decides which queued instances fill the free lanes,
+    so big instances never starve behind a stream of small ones.  Queue
+    entries are ``(work, -seq)`` pairs — the work estimate is the instance
+    size, the same §3.2 single-integer metadata the solver's center runs on;
+    the negated sequence makes equal-size requests drain FIFO under the
+    descending sort.  Buckets follow the solve plane's packing rule: one
+    batch never mixes packed widths W, and never mixes PROBLEMS — a plane
+    compiles one problem's brancher (`solve_many` pads n within a bucket).
 
     Only the admission half of :class:`RequestBatch` (``admit``/
     ``occupancy``) tolerates these tuple entries — never feed a batcher
@@ -134,17 +135,20 @@ class SolveBatcher:
     """
 
     batch_size: int
-    buckets: dict = dataclasses.field(default_factory=dict)  # W -> RequestBatch
+    # (problem, W) -> RequestBatch
+    buckets: dict = dataclasses.field(default_factory=dict)
     graphs: dict = dataclasses.field(default_factory=dict)  # seq -> instance
+    problems: dict = dataclasses.field(default_factory=dict)  # seq -> name
     _seq: int = 0
 
-    def submit(self, g) -> int:
+    def submit(self, g, problem: str = "vertex_cover") -> int:
         """Queue one instance; returns its ticket (submission sequence)."""
         seq = self._seq
         self._seq += 1
         self.graphs[seq] = g
+        self.problems[seq] = problem
         rb = self.buckets.setdefault(
-            g.W, RequestBatch(self.batch_size, [], [])
+            (problem, g.W), RequestBatch(self.batch_size, [], [])
         )
         rb.queued_work.append((g.n, -seq))
         return seq
@@ -153,10 +157,17 @@ class SolveBatcher:
         lanes, rb.active_work = rb.active_work, []
         return [-neg_seq for _, neg_seq in lanes]
 
+    def problem_of(self, ticket) -> str:
+        """The problem a queued ticket was submitted under (call before
+        ``take``, which evicts the record)."""
+        return self.problems[ticket]
+
     def take(self, tickets) -> list:
         """Hand a drained batch's instances to the solver, EVICTING them —
         the batcher holds a graph only between submit and take, so a
         long-lived admission stream does not accumulate solved instances."""
+        for t in tickets:
+            self.problems.pop(t, None)
         return [self.graphs.pop(t) for t in tickets]
 
     def ready_batches(self) -> list:
@@ -180,23 +191,39 @@ class SolveBatcher:
         return out
 
 
-def solve_stream(graphs, batch_size: int, solver=None, **solve_kw) -> list:
+def solve_stream(
+    graphs, batch_size: int, solver=None, problem="vertex_cover", **solve_kw
+) -> list:
     """Drive a request stream through the batcher onto the batched solve
     plane; returns per-instance results in SUBMISSION order.
 
-    ``solver`` defaults to :func:`repro.core.engine.solve_many` (injectable
-    so the admission logic stays testable without the jax engine)."""
+    ``problem`` is one registry name for the whole stream, or a per-instance
+    sequence — mixed streams split into (problem, W) planes and each plane is
+    solved under its own problem.  ``solver`` defaults to
+    :func:`repro.core.engine.solve_many` (injectable so the admission logic
+    stays testable without the jax engine); it receives ``problem=`` per
+    batch."""
     if solver is None:
         from repro.core.engine import solve_many as solver_fn
 
-        def solver(gs, **kw):
-            return solver_fn(gs, **kw).results
+        def solver(gs, problem="vertex_cover", **kw):
+            return solver_fn(gs, problem=problem, **kw).results
 
+    graphs = list(graphs)
+    probs = (
+        [problem] * len(graphs)
+        if isinstance(problem, str)
+        else list(problem)
+    )
+    if len(probs) != len(graphs):
+        raise ValueError("need one problem, or one per instance")
     batcher = SolveBatcher(batch_size)
-    tickets = [batcher.submit(g) for g in graphs]
+    tickets = [batcher.submit(g, p) for g, p in zip(graphs, probs)]
     results = {}
     for batch in batcher.flush():
-        for seq, res in zip(batch, solver(batcher.take(batch), **solve_kw)):
+        batch_problem = batcher.problem_of(batch[0])
+        gs = batcher.take(batch)
+        for seq, res in zip(batch, solver(gs, problem=batch_problem, **solve_kw)):
             results[seq] = res
     return [results[t] for t in tickets]
 

@@ -1,0 +1,105 @@
+"""Regenerate tests/golden_vc.json — the pre-refactor vertex-cover goldens.
+
+The goldens pin `engine.solve` / `engine.solve_many` outputs (best_size,
+best_sol and every deterministic stat) for a fixed set of instances and
+engine configs.  tests/test_problems_generic.py asserts the generic
+problem-plugin plane reproduces them bit-for-bit, so the vertex-cover
+behavior of any future solve-plane refactor stays verifiable.
+
+Run from the repo root (NOT via pytest — the filename is deliberately not
+test_*):
+
+  PYTHONPATH=src python tests/gen_golden_vc.py
+"""
+
+import json
+import os
+
+import numpy as np
+
+from repro.core import engine as E
+from repro.graphs.generators import erdos_renyi
+from repro.problems.sequential import solve_sequential
+
+OUT = os.path.join(os.path.dirname(__file__), "golden_vc.json")
+
+# (label, graph kwargs, solve kwargs) — each exercises a different engine path
+SOLO_CASES = [
+    ("base", dict(n=30, p=0.22, seed=0), dict(num_workers=5, steps_per_round=8)),
+    (
+        "multi_lane_donate",
+        dict(n=24, p=0.3, seed=1),
+        dict(num_workers=4, steps_per_round=4, lanes=2, donate_k=3),
+    ),
+    (
+        "gather_basic_codec",
+        dict(n=26, p=0.28, seed=2),
+        dict(num_workers=4, steps_per_round=8, transfer_impl="gather", codec="basic"),
+    ),
+    (
+        "random_policy_chunk1",
+        dict(n=22, p=0.3, seed=3),
+        dict(num_workers=4, steps_per_round=8, policy_priority=False, chunk_rounds=1),
+    ),
+]
+
+# mixed sizes: W=1 bucket {18, 24, 12} (padding!), W=2 bucket {40, 36};
+# chunk_rounds=2 + threshold 0.5 forces the compaction path
+MANY_SIZES = [18, 40, 24, 12, 36]
+MANY_KW = dict(
+    num_workers=4, steps_per_round=4, chunk_rounds=2, compact_threshold=0.5
+)
+
+
+def _rec(r):
+    return {
+        "best_size": int(r.best_size),
+        "best_sol": [int(w) for w in np.asarray(r.best_sol, np.uint32)],
+        "rounds": int(r.rounds),
+        "nodes_expanded": int(r.nodes_expanded),
+        "tasks_transferred": int(r.tasks_transferred),
+        "transfer_rounds": int(r.transfer_rounds),
+        "transfer_bytes_total": int(r.transfer_bytes_total),
+        "overflow": bool(r.overflow),
+    }
+
+
+def main():
+    golden = {"solo": {}, "fpt": {}, "many": {}}
+    for label, gkw, skw in SOLO_CASES:
+        g = erdos_renyi(gkw["n"], gkw["p"], gkw["seed"])
+        r = E.solve(g, **skw)
+        want, _, _ = solve_sequential(g)
+        assert r.best_size == want, (label, r.best_size, want)
+        golden["solo"][label] = {"graph": gkw, "solve_kw": skw, "result": _rec(r)}
+
+    g = erdos_renyi(24, 0.3, 5)
+    opt, _, _ = solve_sequential(g)
+    r = E.solve(g, num_workers=4, mode="fpt", k=opt)
+    golden["fpt"] = {
+        "graph": dict(n=24, p=0.3, seed=5),
+        "k": int(opt),
+        "result": _rec(r),
+    }
+
+    graphs = [erdos_renyi(n, 0.25, 100 + i) for i, n in enumerate(MANY_SIZES)]
+    batch = E.solve_many(graphs, **MANY_KW)
+    golden["many"] = {
+        "sizes": MANY_SIZES,
+        "p": 0.25,
+        "seed0": 100,
+        "solve_kw": MANY_KW,
+        "compactions": int(batch.compactions),
+        "buckets": [[int(W), int(n_max), list(map(int, idxs))]
+                    for W, n_max, idxs in batch.buckets],
+        "results": [_rec(r) for r in batch.results],
+    }
+
+    with open(OUT, "w") as f:
+        json.dump(golden, f, indent=1)
+        f.write("\n")
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

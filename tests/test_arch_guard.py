@@ -1,0 +1,64 @@
+"""Architecture guard: the core solve plane must stay problem-generic.
+
+The PR-3 refactor extracted the :class:`BranchingProblem` plugin protocol so
+no module under ``src/repro/core/`` depends on a concrete problem's device
+ops.  This test pins that invariant: the refactor cannot silently regress by
+someone re-importing ``repro.problems.vertex_cover`` (or any other concrete
+plugin's device module) from core.  Core may import the protocol
+(``repro.problems.base``) and the name registry
+(``repro.problems.registry``); the host sims (protocol_sim / centralized)
+may keep using the sequential REFERENCE module, which predates and is
+independent of the device plane.
+"""
+
+import ast
+import pathlib
+
+CORE = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro" / "core"
+
+# concrete problem plugins core must never import
+FORBIDDEN = {
+    "repro.problems.vertex_cover",
+    "repro.problems.max_clique",
+    "repro.problems.mis",
+}
+
+
+def _imports_of(path: pathlib.Path):
+    tree = ast.parse(path.read_text())
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                yield alias.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            yield node.module
+
+
+def test_core_never_imports_a_concrete_problem():
+    assert CORE.is_dir(), CORE
+    offenders = {}
+    for path in sorted(CORE.glob("*.py")):
+        bad = [
+            mod
+            for mod in _imports_of(path)
+            if mod in FORBIDDEN
+            or any(mod.startswith(f + ".") for f in FORBIDDEN)
+        ]
+        if bad:
+            offenders[path.name] = bad
+    assert not offenders, (
+        f"core modules import concrete problem plugins: {offenders} — "
+        f"route through repro.problems.registry / repro.problems.base instead"
+    )
+
+
+def test_core_resolves_problems_through_the_registry():
+    """The engine's defaults come from the registry, not a hardcoded plugin:
+    the default-problem constant lives in problems/, and core references it
+    by import."""
+    from repro.core import engine
+    from repro.problems.registry import DEFAULT_PROBLEM, get_problem
+
+    assert engine.DEFAULT_PROBLEM == DEFAULT_PROBLEM
+    # and the registry resolves it to a real spec
+    assert get_problem(DEFAULT_PROBLEM).name == DEFAULT_PROBLEM

@@ -90,6 +90,37 @@ def test_solve_stream_returns_submission_order():
     assert all(len(batch) <= 2 for batch in seen)
 
 
+def test_buckets_key_on_problem_and_width():
+    """Same W, different problem -> different planes: a solve batch compiles
+    ONE problem's brancher, so the batcher must never mix problems."""
+    b = SolveBatcher(batch_size=2)
+    t_vc = [b.submit(_FakeGraph(n), "vertex_cover") for n in (20, 22)]
+    t_cl = [b.submit(_FakeGraph(n), "max_clique") for n in (21, 23)]
+    batches = b.ready_batches()
+    assert len(batches) == 2
+    probs = sorted(b.problem_of(batch[0]) for batch in batches)
+    assert probs == ["max_clique", "vertex_cover"]
+    for batch in batches:
+        assert len({b.problem_of(t) for t in batch}) == 1
+    assert sorted(t for batch in batches for t in batch) == sorted(t_vc + t_cl)
+
+
+def test_solve_stream_mixed_problems():
+    """A mixed request stream splits per problem and each batch's solver
+    call carries its own problem name."""
+    gs = [_FakeGraph(n) for n in (20, 21, 22, 23)]
+    probs = ["vertex_cover", "mis", "vertex_cover", "mis"]
+    calls = []
+
+    def fake_solver(batch, problem=None, **kw):
+        calls.append((problem, [g.n for g in batch]))
+        return [f"{problem}:{g.n}" for g in batch]
+
+    out = solve_stream(gs, 2, solver=fake_solver, problem=probs)
+    assert out == [f"{p}:{g.n}" for p, g in zip(probs, gs)]
+    assert sorted(p for p, _ in calls) == ["mis", "vertex_cover"]
+
+
 def test_balancing_reduces_makespan():
     works = list(np.random.default_rng(0).integers(8, 128, 48))
     off = simulate(8, 4, works, balance=False)

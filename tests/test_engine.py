@@ -10,8 +10,11 @@ from repro.core import engine as E
 from repro.core.superstep import build_superstep_fn, make_worker_state
 from repro.graphs.bitgraph import n_words
 from repro.graphs.generators import erdos_renyi
+from repro.problems.base import make_data
+from repro.problems.registry import get_problem
 from repro.problems.sequential import solve_sequential, verify_cover
-from repro.problems.vertex_cover import make_problem
+
+VC = get_problem("vertex_cover")
 
 
 @pytest.mark.parametrize("policy", [True, False])
@@ -61,9 +64,9 @@ def test_snapshot_restore_resize():
     W = n_words(g.n)
     cap = 4 * g.n + 8
     state = jax.vmap(lambda _: make_worker_state(cap, W, g.n + 1))(jnp.arange(8))
-    state = E._scatter_startup(state, g, 8)
-    problem = make_problem(jnp.asarray(g.adj), g.n)
-    fn = build_superstep_fn(problem, num_workers=8, steps_per_round=4, lanes=1)
+    state = E._scatter_startup(state, VC, g, 8)
+    data = make_data(VC, g)
+    fn = build_superstep_fn(VC, data, num_workers=8, steps_per_round=4, lanes=1)
     for _ in range(3):
         state, done = fn(state)
     snap = E.snapshot(state)  # "node failure" here
@@ -137,7 +140,7 @@ def test_scatter_startup_overflow_uses_waiting_list_order():
     tasks = expand_frontier(g, num_tasks=2 * P + 3)  # BFS over-expansion
     assert len(tasks) > P
     state = jax.vmap(lambda _: make_worker_state(40, W, g.n + 1))(jnp.arange(P))
-    placed = E._scatter_startup(state, g, P, tasks=tasks)
+    placed = E._scatter_startup(state, VC, g, P, tasks=tasks)
     order = startup_assignment(max_b=2, p=P)
     want_counts = np.zeros(P, np.int64)
     for i in range(len(tasks)):

@@ -1,0 +1,239 @@
+"""The problem-generic solve plane.
+
+Three guarantees from the PR-3 refactor:
+
+1. **Vertex-cover bit-identity** — the generic plane reproduces the
+   pre-refactor engine outputs exactly (best_size, best_sol AND every
+   deterministic stat), solo and batched (padding + compaction paths
+   included), pinned by ``tests/golden_vc.json`` (regenerate with
+   ``python tests/gen_golden_vc.py`` — only ever from a known-good tree).
+2. **New workloads are exact** — max-clique and MIS on the unchanged
+   coordination machinery agree with their sequential references across
+   ≥50 random G(n, p) graphs, solo and on the batched plane, and their
+   solutions verify structurally (clique edges / independence).
+3. **Registries fail helpfully** — unknown problem/codec names raise a
+   ``ValueError`` listing what is available.
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import engine as E
+from repro.core.encoding import make_codec
+from repro.graphs.bitgraph import complement
+from repro.graphs.generators import erdos_renyi
+from repro.problems.registry import get_problem
+from repro.problems.sequential import (
+    solve_sequential,
+    solve_sequential_max_clique,
+    solve_sequential_mis,
+    verify_clique,
+    verify_independent_set,
+)
+
+GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden_vc.json").read_text()
+)
+
+
+def _check_golden(result, want: dict):
+    got = {
+        "best_size": int(result.best_size),
+        "best_sol": [int(w) for w in np.asarray(result.best_sol, np.uint32)],
+        "rounds": int(result.rounds),
+        "nodes_expanded": int(result.nodes_expanded),
+        "tasks_transferred": int(result.tasks_transferred),
+        "transfer_rounds": int(result.transfer_rounds),
+        "transfer_bytes_total": int(result.transfer_bytes_total),
+        "overflow": bool(result.overflow),
+    }
+    assert got == want
+
+
+# -- 1. vertex-cover bit-identity vs pre-refactor goldens ----------------------
+
+
+@pytest.mark.parametrize("label", sorted(GOLDEN["solo"]))
+def test_vc_solo_bit_identical_to_golden(label):
+    case = GOLDEN["solo"][label]
+    gkw = case["graph"]
+    g = erdos_renyi(gkw["n"], gkw["p"], gkw["seed"])
+    r = E.solve(g, **case["solve_kw"])
+    _check_golden(r, case["result"])
+
+
+def test_vc_fpt_bit_identical_to_golden():
+    case = GOLDEN["fpt"]
+    gkw = case["graph"]
+    g = erdos_renyi(gkw["n"], gkw["p"], gkw["seed"])
+    r = E.solve(g, num_workers=4, mode="fpt", k=case["k"])
+    _check_golden(r, case["result"])
+
+
+def test_vc_solve_many_bit_identical_to_golden():
+    """The batched plane, including the padding (mixed n within a W bucket)
+    and host-side compaction paths, against the pre-refactor goldens."""
+    case = GOLDEN["many"]
+    graphs = [
+        erdos_renyi(n, case["p"], case["seed0"] + i)
+        for i, n in enumerate(case["sizes"])
+    ]
+    batch = E.solve_many(graphs, **case["solve_kw"])
+    assert batch.compactions == case["compactions"]
+    assert [[W, n_max, idxs] for W, n_max, idxs in batch.buckets] == case["buckets"]
+    for r, want in zip(batch.results, case["results"]):
+        _check_golden(r, want)
+
+
+# -- 2. max-clique / MIS vs their sequential references ------------------------
+
+# ≥50 random G(n, p) graphs across both new problems (the satellite's floor);
+# solved on the BATCHED plane (one compiled executable per W bucket) plus
+# solo spot-checks below.
+N_GRAPHS = 30  # per problem -> 60 total
+
+
+def _random_graphs(problem_seed: int):
+    rng = np.random.default_rng(problem_seed)
+    sizes = rng.integers(10, 19, size=N_GRAPHS)
+    ps = rng.uniform(0.25, 0.55, size=N_GRAPHS)
+    return [
+        erdos_renyi(int(n), float(p), int(s))
+        for n, p, s in zip(sizes, ps, rng.integers(0, 10_000, size=N_GRAPHS))
+    ]
+
+
+def test_max_clique_matches_sequential_reference_many():
+    graphs = _random_graphs(1)
+    batch = E.solve_many(
+        graphs, num_workers=4, steps_per_round=4, problem="max_clique"
+    )
+    for g, r in zip(graphs, batch.results):
+        want, _, _ = solve_sequential_max_clique(g)
+        assert r.best_size == want
+        assert verify_clique(g, r.best_sol)
+        assert not r.overflow
+
+
+def test_mis_matches_sequential_reference_many():
+    graphs = _random_graphs(2)
+    batch = E.solve_many(graphs, num_workers=4, steps_per_round=4, problem="mis")
+    for g, r in zip(graphs, batch.results):
+        want, _, _ = solve_sequential_mis(g)
+        assert r.best_size == want
+        assert verify_independent_set(g, r.best_sol)
+        assert not r.overflow
+
+
+@pytest.mark.parametrize("problem,seq_ref,verify", [
+    ("max_clique", solve_sequential_max_clique, verify_clique),
+    ("mis", solve_sequential_mis, verify_independent_set),
+])
+def test_new_problems_solo_solve(problem, seq_ref, verify):
+    for seed in (0, 1, 2):
+        g = erdos_renyi(16, 0.4, seed)
+        want, _, _ = seq_ref(g)
+        r = E.solve(g, num_workers=4, steps_per_round=8, problem=problem)
+        assert r.best_size == want
+        assert verify(g, r.best_sol)
+        assert not r.overflow
+
+
+def test_reductions_tie_the_three_problems_together():
+    """Gallai identities on the same graph: mis(G) = n - vc(G) and
+    clique(G) = mis(complement(G)) — all three measured on the engine."""
+    g = erdos_renyi(15, 0.35, 7)
+    kw = dict(num_workers=4, steps_per_round=8)
+    vc = E.solve(g, problem="vertex_cover", **kw).best_size
+    mis = E.solve(g, problem="mis", **kw).best_size
+    clique = E.solve(g, problem="max_clique", **kw).best_size
+    mis_comp = E.solve(complement(g), problem="mis", **kw).best_size
+    assert mis == g.n - vc
+    assert clique == mis_comp
+
+
+def test_fpt_mode_max_clique():
+    """Decision mode generalizes across the objective flip: "is there a
+    clique of size >= k" stops at the first hit; k+1 is unsatisfiable."""
+    g = erdos_renyi(16, 0.45, 11)
+    opt, _, _ = solve_sequential_max_clique(g)
+    hit = E.solve(g, num_workers=4, problem="max_clique", mode="fpt", k=opt)
+    assert hit.best_size != -1 and hit.best_size >= opt
+    miss = E.solve(g, num_workers=4, problem="max_clique", mode="fpt", k=opt + 1)
+    assert miss.best_size == -1 and miss.best_sol is None
+
+
+def test_sequential_clique_fpt_reference():
+    g = erdos_renyi(14, 0.5, 3)
+    opt, _, _ = solve_sequential_max_clique(g)
+    size, sol, _ = solve_sequential_max_clique(g, mode="fpt", k=opt)
+    assert size >= opt and verify_clique(g, sol)
+    size, sol, _ = solve_sequential_max_clique(g, mode="fpt", k=opt + 1)
+    assert size == -1 and sol is None
+
+
+# -- 3. registry validation ----------------------------------------------------
+
+
+def test_unknown_problem_lists_known_names():
+    with pytest.raises(ValueError, match="vertex_cover"):
+        get_problem("knapsack")
+    with pytest.raises(ValueError, match="max_clique"):
+        E.solve(erdos_renyi(8, 0.3, 0), problem="nope")
+
+
+def test_unknown_codec_lists_known_names():
+    with pytest.raises(ValueError, match="optimized"):
+        make_codec("huffman", 10)
+    with pytest.raises(ValueError, match="basic"):
+        E.solve(erdos_renyi(8, 0.3, 0), codec="nope")
+
+
+def test_problem_aliases_resolve():
+    assert get_problem("vc").name == "vertex_cover"
+    assert get_problem("clique").name == "max_clique"
+    assert get_problem("independent_set").name == "mis"
+
+
+def test_codec_record_schema_parameterized():
+    """Codecs derive their byte counts from the problem's record schema."""
+    spec = get_problem("max_clique")
+    opt = make_codec("optimized", 40, problem=spec)
+    bas = make_codec("basic", 40, problem=spec)
+    W = opt.W
+    assert opt.record_words == 2 * W + 1
+    assert opt.pad_words == 0
+    assert bas.record_words == (40 + 2) * W + 1
+    assert bas.pad_words == 40 * W
+
+
+def test_codec_extra_record_fields_travel():
+    """Schema extras beyond the native triple are real payload: encode()
+    emits them (zero-filled) and pad_words tells the data plane to move
+    them, so byte accounting always matches the wire."""
+    import dataclasses
+
+    from repro.core.encoding import CODECS, Task
+    import numpy as np
+
+    spec = dataclasses.replace(
+        get_problem("vertex_cover"),
+        record_fields=get_problem("vertex_cover").record_fields
+        + (("extra", 2),),
+    )
+    opt = make_codec("optimized", 40, problem=spec)
+    W = opt.W
+    assert opt.record_words == 2 * W + 1 + 2
+    assert opt.pad_words == 2
+    task = Task(
+        mask=np.zeros(W, np.uint32), sol_mask=np.zeros(W, np.uint32), depth=3
+    )
+    assert len(opt.encode(task)) == opt.record_words
+    bas = make_codec("basic", 40, problem=spec)
+    assert bas.pad_words == 40 * W + 2
+    # a schema that does not start with the native triple is rejected
+    with pytest.raises(ValueError, match="native"):
+        CODECS["optimized"](40, (("sol", "W"), ("mask", "W"), ("depth", 1)))

@@ -18,8 +18,11 @@ from repro.core.superstep import (
     build_batch_superstep_fn,
 )
 from repro.graphs.generators import erdos_renyi
+from repro.problems.registry import get_problem
 from repro.problems.sequential import solve_sequential
 from repro.problems.vertex_cover import VCProblem
+
+VC = get_problem("vertex_cover")
 
 
 def _assert_matches_solo(graphs, batch, **solve_kw):
@@ -167,7 +170,7 @@ def test_donation_never_crosses_instance_axis():
             [(0, 0x1, 3), (0, 0x3, 2), (0, 0x7, 1)],
         ]
     )
-    fn = build_batch_superstep_fn(problems, steps_per_round=0, lanes=1)
+    fn = build_batch_superstep_fn(VC, problems, steps_per_round=0, lanes=1)
     new, done = fn(state)
     assert not bool(done[0]) and not bool(done[1])
 
@@ -198,6 +201,6 @@ def test_per_instance_quiescence():
     """An empty instance is done immediately; a live one in the same batch
     keeps its pending work — done is a per-instance vector."""
     state, problems = _hand_built_batch([[], [(0, 0x1, 0), (1, 0x3, 1)]])
-    fn = build_batch_superstep_fn(problems, steps_per_round=0, lanes=1)
+    fn = build_batch_superstep_fn(VC, problems, steps_per_round=0, lanes=1)
     _, done = fn(state)
     assert bool(done[0]) and not bool(done[1])

@@ -16,7 +16,10 @@ from repro.core.frontier import make_frontier, pop_k_shallowest, push_many
 from repro.core.superstep import build_superstep_fn, make_worker_state
 from repro.graphs.bitgraph import n_words
 from repro.graphs.generators import erdos_renyi
-from repro.problems.vertex_cover import make_problem
+from repro.problems.base import make_data
+from repro.problems.registry import get_problem
+
+VC = get_problem("vertex_cover")
 
 N = 32
 W = n_words(N)
@@ -53,11 +56,12 @@ def _random_state(seed: int):
 @given(st.integers(0, 10_000), st.integers(1, 4))
 def test_gather_and_sparse_paths_identical(seed, donate_k):
     g = erdos_renyi(N, 0.2, seed % 17)
-    problem = make_problem(jnp.asarray(g.adj), g.n)
+    data = make_data(VC, g)
     state = _random_state(seed)
     fns = {
         impl: build_superstep_fn(
-            problem,
+            VC,
+            data,
             num_workers=P,
             steps_per_round=2,
             lanes=1,
