@@ -1,14 +1,17 @@
 """Batched multi-instance solve plane: instances/sec vs a sequential loop.
 
 For B in {1, 4, 16}: B independent G(n, p) instances solved (a) by a loop of
-B single-instance ``engine.solve`` calls — the only option before the
-instance axis existed; each call builds and jits its own chunk executable and
-pays its own per-chunk host syncs — and (b) by ONE ``engine.solve_many``
-call, which packs the batch into padded (B, n, W) problem tensors behind a
-single compiled executable and one host sync per chunk for the whole batch.
+B single-instance solves, each through a FRESH session — every call builds
+and jits its own chunk executable and pays its own per-chunk host syncs,
+which was the only option before the instance axis (and the compiled-plane
+cache) existed — and (b) by ONE ``session.solve_many`` call, which packs the
+batch into padded (B, n, W) problem tensors behind a single compiled
+executable and one host sync per chunk for the whole batch.
 
 Per-instance ``best_size``/``best_sol`` are asserted bit-identical between
 the two paths (the batched plane is an amortization, not an approximation).
+Warm-plane reuse within one long-lived session is measured separately by
+``benchmarks/session_warm.py``.
 
 ``run(smoke=True)`` shrinks the instances for the CI bench-smoke job and the
 returned dict lands in BENCH_smoke.json (EXPERIMENTS.md §C tracks the
@@ -19,7 +22,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import engine as E
+from repro.api import SolveConfig, SolverSession
 from repro.graphs.generators import erdos_renyi
 
 BATCH_SIZES = (1, 4, 16)
@@ -27,14 +30,14 @@ BATCH_SIZES = (1, 4, 16)
 
 def _bench_one(B: int, *, n: int, p: float, workers: int, spr: int) -> dict:
     graphs = [erdos_renyi(n, p, seed) for seed in range(B)]
+    cfg = SolveConfig(num_workers=workers, steps_per_round=spr)
 
     t0 = time.perf_counter()
-    singles = [
-        E.solve(g, num_workers=workers, steps_per_round=spr) for g in graphs
-    ]
+    # fresh session (fresh PlaneCache) per solve = the pre-batching baseline
+    singles = [SolverSession(config=cfg).solve(g) for g in graphs]
     seq_wall = time.perf_counter() - t0
 
-    batch = E.solve_many(graphs, num_workers=workers, steps_per_round=spr)
+    batch = SolverSession(config=cfg).solve_many(graphs)
     batch_wall = batch.wall_s
 
     for s, b in zip(singles, batch.results):
@@ -71,7 +74,7 @@ def run(smoke: bool = False) -> dict:
             f"< {MIN_SPEEDUP_B16}x (benchmark-gated CI, EXPERIMENTS.md §C)"
         )
     print(f"G({n}, {p}), {workers} workers/instance, "
-          f"steps_per_round={spr}; sequential loop = B x engine.solve")
+          f"steps_per_round={spr}; sequential loop = B x fresh-session solve")
     print(f"{'B':>4} {'seq inst/s':>12} {'batch inst/s':>13} {'speedup':>8}")
     for r in rows:
         print(f"{r['B']:>4} {r['seq_inst_per_s']:>12} "

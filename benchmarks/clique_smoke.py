@@ -2,8 +2,8 @@
 
 The bench-smoke CI job runs this alongside the vertex-cover benchmarks so
 every PR exercises a SECOND registry problem end to end: a small batch of
-G(n, p) instances solved by ``engine.solve_many(problem="max_clique")``,
-checked against the sequential reference, with throughput recorded in
+G(n, p) instances solved by a max-clique ``SolverSession`` on one batched
+plane, checked against the sequential reference, with throughput recorded in
 BENCH_smoke.json (tagged with the problem name).
 """
 
@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import engine as E
+from repro.api import SolveConfig, SolverSession
 from repro.graphs.generators import erdos_renyi
 from repro.problems.sequential import solve_sequential_max_clique, verify_clique
 
@@ -19,11 +19,13 @@ from repro.problems.sequential import solve_sequential_max_clique, verify_clique
 def run(smoke: bool = False) -> dict:
     n, p, B, workers, spr = (20, 0.4, 4, 4, 8) if smoke else (32, 0.35, 8, 6, 8)
     graphs = [erdos_renyi(n, p, seed) for seed in range(B)]
+    session = SolverSession(
+        problem="max_clique",
+        config=SolveConfig(num_workers=workers, steps_per_round=spr),
+    )
 
     t0 = time.perf_counter()
-    batch = E.solve_many(
-        graphs, num_workers=workers, steps_per_round=spr, problem="max_clique"
-    )
+    batch = session.solve_many(graphs)
     wall = time.perf_counter() - t0
 
     sizes = []
@@ -34,7 +36,7 @@ def run(smoke: bool = False) -> dict:
             f"{r.best_size} != {want}"
         )
         assert verify_clique(g, r.best_sol)
-        assert not r.overflow
+        assert not r.stats["overflow"]
         sizes.append(r.best_size)
 
     print(f"max_clique on G({n}, {p}) x {B}: sizes={sizes}, "

@@ -24,7 +24,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import engine as E
+from repro.api import SolveConfig, SolverSession
+from repro.core import engine as E  # startup-scatter helper for chunked_ab
 from repro.core.superstep import (
     build_chunk_fn,
     build_superstep_fn,
@@ -42,21 +43,23 @@ def budget_rows():
     want, _, _ = solve_sequential(g)
     rows = []
     for p in (2, 4, 8):
-        for policy in (True, False):
-            r = E.solve(
-                g, num_workers=p, steps_per_round=8, policy_priority=policy
-            )
+        for policy in ("priority", "random"):
+            r = SolverSession(config=SolveConfig(
+                num_workers=p, steps_per_round=8, policy=policy
+            )).solve(g)
             assert r.best_size == want
             rows.append(
                 dict(
                     workers=p,
-                    policy="priority" if policy else "round_robin",
+                    policy="priority" if policy == "priority" else "round_robin",
                     rounds=r.rounds,
                     nodes=r.nodes_expanded,
                     transfers=r.tasks_transferred,
                     nodes_per_round=round(r.nodes_expanded / r.rounds, 1),
-                    control_B_per_round=r.control_bytes_per_round,
-                    transfer_B_per_round=round(r.transfer_bytes_per_round, 1),
+                    control_B_per_round=r.stats["control_bytes_per_round"],
+                    transfer_B_per_round=round(
+                        r.stats["transfer_bytes_per_round"], 1
+                    ),
                 )
             )
     return rows
@@ -127,7 +130,9 @@ def transfer_ab():
     out = []
     results = {}
     for impl in ("gather", "sparse"):
-        r = E.solve(g, num_workers=8, steps_per_round=16, transfer_impl=impl)
+        r = SolverSession(config=SolveConfig(
+            num_workers=8, steps_per_round=16, transfer_impl=impl
+        )).solve(g)
         results[impl] = r
         rec_words = 2 * n_words(g.n) + 1
         out.append(
@@ -135,10 +140,12 @@ def transfer_ab():
                 impl=impl,
                 best=r.best_size,
                 rounds=r.rounds,
-                transfer_rounds=r.transfer_rounds,
+                transfer_rounds=r.stats["transfer_rounds"],
                 tasks_moved=r.tasks_transferred,
-                payload_B_total=r.transfer_bytes_total,
-                payload_B_per_round=round(r.transfer_bytes_per_round, 1),
+                payload_B_total=r.stats["transfer_bytes_total"],
+                payload_B_per_round=round(
+                    r.stats["transfer_bytes_per_round"], 1
+                ),
                 record_B=4 * rec_words,
             )
         )
@@ -148,7 +155,7 @@ def transfer_ab():
     )
     # sparse payload is exactly the matched records; no-match rounds are free
     rec_words = 2 * n_words(g.n) + 1
-    assert b.transfer_bytes_total == 4 * rec_words * b.tasks_transferred
+    assert b.stats["transfer_bytes_total"] == 4 * rec_words * b.tasks_transferred
     return out
 
 

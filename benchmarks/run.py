@@ -6,6 +6,7 @@
   engine_throughput TPU-adapted engine rounds/transfers budget
   batch_throughput  multi-instance solve plane vs sequential loop
   clique_smoke      max-clique on the generic plane vs sequential reference
+  session_warm      cold-vs-warm SolverSession (compiled-plane cache gate)
   balancer_bench    beyond-paper serving balancer
   kernel_bench      kernel arithmetic-intensity table
 
@@ -33,6 +34,7 @@ from benchmarks import (
     engine_throughput,
     kernel_bench,
     protocol_stats,
+    session_warm,
     speedup,
 )
 
@@ -42,13 +44,16 @@ ALL = {
     "engine_throughput": engine_throughput,
     "batch_throughput": batch_throughput,
     "clique_smoke": clique_smoke,
+    "session_warm": session_warm,
     "balancer_bench": balancer_bench,
     "kernel_bench": kernel_bench,
     "speedup": speedup,
 }
 
 # kept fast enough for a per-PR CI job; full runs remain opt-in by name
-SMOKE_DEFAULT = ("encoding_bytes", "batch_throughput", "clique_smoke")
+SMOKE_DEFAULT = (
+    "encoding_bytes", "batch_throughput", "clique_smoke", "session_warm"
+)
 
 SMOKE_JSON = "BENCH_smoke.json"
 

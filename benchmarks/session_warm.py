@@ -1,0 +1,94 @@
+"""Cold vs warm session solves: the compiled-plane cache payoff.
+
+A ``SolverSession`` keys compiled planes by (problem, codec, shape, config)
+and takes the instance tensors as call-time arguments, so the SECOND solve
+of a same-shape instance reuses the executable outright — no tracing, no
+XLA compile, just the device loop.  This benchmark measures exactly that:
+
+* **cold** — the session's first solve (trace + compile + run);
+* **warm** — a same-shape solve of a DIFFERENT graph right after;
+* **warm-repeat** — the same graph again, asserted bit-identical to cold.
+
+``run(smoke=True)`` is in the CI bench-smoke set and GATES the speedup:
+warm must be at least ``MIN_WARM_SPEEDUP`` x faster than cold, and the
+cache/trace accounting must show exactly one trace for the same-shape pair.
+This is the per-PR guard on the executable-reuse contract (EXPERIMENTS.md
+§E tracks the numbers).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.api import SolveConfig, SolverSession
+from repro.core import superstep
+from repro.graphs.generators import erdos_renyi
+
+# acceptance bar (ISSUE 4): warm wall-clock >= 5x faster than cold.
+# measured headroom is ~2 orders of magnitude above it on CPU.
+MIN_WARM_SPEEDUP = 5.0
+
+
+def run(smoke: bool = False) -> dict:
+    n, p, workers, spr = (24, 0.3, 4, 8) if smoke else (40, 0.28, 6, 8)
+    session = SolverSession(
+        problem="vertex_cover",
+        config=SolveConfig(num_workers=workers, steps_per_round=spr),
+    )
+    g_cold = erdos_renyi(n, p, 0)
+    g_warm = erdos_renyi(n, p, 1)
+
+    traces0 = superstep.PLANE_TRACES
+    t0 = time.perf_counter()
+    r_cold = session.solve(g_cold)
+    cold_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    r_warm = session.solve(g_warm)
+    warm_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    r_repeat = session.solve(g_cold)
+    repeat_s = time.perf_counter() - t0
+    traces = superstep.PLANE_TRACES - traces0
+
+    # correctness invariants of the reuse: one trace for the same-shape trio,
+    # and the warm repeat is bit-identical to the cold solve
+    stats = session.cache_stats()
+    assert traces == 1, f"same-shape solves traced {traces}x, want 1"
+    assert stats["misses"] == 1 and stats["hits"] == 2, stats
+    assert r_repeat.best_size == r_cold.best_size
+    assert (r_repeat.best_sol == r_cold.best_sol).all()
+    assert r_repeat.rounds == r_cold.rounds
+    assert r_warm.best_size is not None
+
+    speedup = cold_s / max(warm_s, 1e-9)
+    if smoke:  # the CI gate; full-size local runs just report
+        assert speedup >= MIN_WARM_SPEEDUP, (
+            f"warm-plane reuse regressed: warm solve only {speedup:.1f}x "
+            f"faster than cold (< {MIN_WARM_SPEEDUP}x; benchmark-gated CI)"
+        )
+
+    print(f"G({n}, {p}), {workers} workers, steps_per_round={spr}")
+    print(f"cold  (trace+compile+run): {cold_s * 1e3:9.1f} ms")
+    print(f"warm  (same-shape reuse) : {warm_s * 1e3:9.1f} ms   "
+          f"({speedup:.1f}x)")
+    print(f"warm  (repeat, bit-identical): {repeat_s * 1e3:5.1f} ms")
+    print(f"cache: {stats}")
+    return dict(
+        problem="vertex_cover",
+        n=n,
+        p=p,
+        workers=workers,
+        steps_per_round=spr,
+        cold_s=round(cold_s, 4),
+        warm_s=round(warm_s, 4),
+        warm_repeat_s=round(repeat_s, 4),
+        warm_speedup=round(speedup, 1),
+        plane_traces=traces,
+        cache=stats,
+    )
+
+
+if __name__ == "__main__":
+    run()

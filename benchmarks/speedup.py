@@ -47,26 +47,29 @@ def donation_rows(graph_name, g, workers_list):
     """SPMD engine: multi-task donation (``donate_k``) on a skewed tree —
     a matched donor ships up to k shallowest tasks, so starved workers are
     refilled in fewer rebalance rounds (tasks moved per transfer round)."""
-    from repro.core.engine import solve
+    from repro.api import SolveConfig, SolverSession
 
     out = []
     for p in workers_list:
         base = None
         for k in (1, 4):
-            r = solve(g, num_workers=p, steps_per_round=8, donate_k=k)
+            r = SolverSession(config=SolveConfig(
+                num_workers=p, steps_per_round=8, donate_k=k
+            )).solve(g)
             if base is None:
                 base = r.best_size
             assert r.best_size == base
+            transfer_rounds = r.stats["transfer_rounds"]
             out.append(
                 dict(
                     graph=graph_name,
                     workers=p,
                     donate_k=k,
                     rounds=r.rounds,
-                    transfer_rounds=r.transfer_rounds,
+                    transfer_rounds=transfer_rounds,
                     tasks_moved=r.tasks_transferred,
                     tasks_per_transfer_round=round(
-                        r.tasks_transferred / max(r.transfer_rounds, 1), 2
+                        r.tasks_transferred / max(transfer_rounds, 1), 2
                     ),
                 )
             )

@@ -9,30 +9,33 @@ sys.path.insert(0, "src")
 
 import jax
 
-from repro.core.engine import solve
-from repro.core.protocol_sim import run_protocol_sim
+from repro.api import SolveConfig, SolverSession
 from repro.graphs.generators import erdos_renyi
 from repro.launch.train import train_loop
 from repro.configs.registry import get_smoke_config
-from repro.problems.sequential import solve_sequential, verify_cover
+from repro.problems.sequential import verify_cover
 
 
 def main():
     # --- 1. the paper's workload: minimum vertex cover, three engines -----
+    # one façade over every engine: pick a backend, get one result schema
     g = erdos_renyi(50, 4 / 49, seed=7)
     print(f"graph: n={g.n} m={g.num_edges}")
-    best, sol, stats = solve_sequential(g)
-    print(f"sequential:        mvc={best} ({stats.nodes} nodes)")
+    cfg = SolveConfig(num_workers=6, steps_per_round=16)
 
-    res = run_protocol_sim(g, num_workers=6)
+    seq = SolverSession(backend="sequential", config=cfg).solve(g)
+    print(f"sequential:        mvc={seq.best_size} "
+          f"({seq.nodes_expanded} nodes)")
+
+    sim = SolverSession(backend="protocol_sim", config=cfg).solve(g)
     print(
-        f"semi-centralized:  mvc={res.best_size} "
-        f"(async protocol sim, {res.stats.tasks_transferred} transfers, "
-        f"{res.stats.failed_requests} failed requests)"
+        f"semi-centralized:  mvc={sim.best_size} "
+        f"(async protocol sim, {sim.tasks_transferred} transfers, "
+        f"{sim.stats['failed_requests']} failed requests)"
     )
 
-    r = solve(g, num_workers=6, steps_per_round=16)
-    ok = r.best_size == best and verify_cover(g, r.best_sol)
+    r = SolverSession(backend="spmd", config=cfg).solve(g)
+    ok = r.best_size == seq.best_size and verify_cover(g, r.best_sol)
     print(
         f"SPMD engine:       mvc={r.best_size} "
         f"({r.rounds} supersteps, {r.tasks_transferred} transfers, "

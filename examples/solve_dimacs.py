@@ -1,12 +1,14 @@
 """Paper case study end-to-end: a DIMACS-style hard instance solved by the
 semi-centralized, centralized and SPMD engines; reproduces the §4 comparison
-(byte counts, failed requests, encoding effect) at laptop scale.
+(byte counts, failed requests, encoding effect) at laptop scale — all four
+backends driven through the ONE public `repro.api.SolverSession` façade.
 
   PYTHONPATH=src python examples/solve_dimacs.py [n] [density]
 
 Multi-file mode: pass DIMACS files and they are packed onto ONE batched
-solve plane (`engine.solve_many` — shared executable, per-instance results);
-`--problem max_clique` (or mis / vertex_cover) picks the registry problem:
+solve plane (`session.solve_many` — shared executable, per-instance
+results); `--problem max_clique` (or mis / vertex_cover) picks the registry
+problem:
 
   PYTHONPATH=src python examples/solve_dimacs.py --files a.col b.col c.col
   PYTHONPATH=src python examples/solve_dimacs.py --problem mis --files a.col
@@ -16,12 +18,9 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core.centralized import run_centralized_sim
-from repro.core.engine import solve, solve_many
-from repro.core.protocol_sim import run_protocol_sim
+from repro.api import SolveConfig, SolverSession
 from repro.graphs.generators import p_hat_like, parse_dimacs, to_dimacs
 from repro.problems.registry import get_problem
-from repro.problems.sequential import solve_sequential
 
 
 def solve_files(paths, problem="vertex_cover"):
@@ -31,7 +30,10 @@ def solve_files(paths, problem="vertex_cover"):
     for path in paths:
         with open(path) as f:
             graphs.append(parse_dimacs(f.read()))
-    res = solve_many(graphs, num_workers=8, steps_per_round=16, problem=spec)
+    session = SolverSession(
+        problem=spec, config=SolveConfig(num_workers=8, steps_per_round=16)
+    )
+    res = session.solve_many(graphs)
     print(f"{len(graphs)} instances [{spec.name}] on one plane, "
           f"{len(res.buckets)} (n,W) bucket(s), {res.wall_s:.2f}s total "
           f"({len(graphs) / max(res.wall_s, 1e-9):.2f} inst/s)")
@@ -69,51 +71,58 @@ def main():
     print(f"p_hat-style instance: n={g.n} m={g.num_edges}")
     print(to_dimacs(g).splitlines()[0])
 
-    best, _, st = solve_sequential(g)
-    print(f"\nsequential: mvc={best}, {st.nodes} nodes")
+    best = SolverSession(backend="sequential").solve(g)
+    print(f"\nsequential: mvc={best.best_size}, {best.nodes_expanded} nodes")
 
     print(f"\n{'engine':<22}{'codec':<12}{'ticks/rounds':<14}{'bytes':<12}"
           f"{'center B':<10}{'failed':<7}")
     for codec in ("optimized", "basic"):
-        semi = run_protocol_sim(g, num_workers=8, codec_name=codec)
-        cent = run_centralized_sim(g, num_workers=8, codec_name=codec)
-        assert semi.best_size == cent.best_size == best
-        print(f"{'semi-centralized':<22}{codec:<12}{semi.ticks:<14}"
-              f"{semi.stats.total_bytes:<12}{semi.stats.center_bytes:<10}"
-              f"{semi.stats.failed_requests:<7}")
-        print(f"{'centralized':<22}{codec:<12}{cent.ticks:<14}"
-              f"{cent.stats.total_bytes:<12}{'-':<10}{'-':<7}")
+        cfg = SolveConfig(num_workers=8, codec=codec)
+        semi = SolverSession(backend="protocol_sim", config=cfg).solve(g)
+        cent = SolverSession(backend="centralized", config=cfg).solve(g)
+        assert semi.best_size == cent.best_size == best.best_size
+        print(f"{'semi-centralized':<22}{codec:<12}{semi.rounds:<14}"
+              f"{semi.stats['total_bytes']:<12}{semi.stats['center_bytes']:<10}"
+              f"{semi.stats['failed_requests']:<7}")
+        print(f"{'centralized':<22}{codec:<12}{cent.rounds:<14}"
+              f"{cent.stats['total_bytes']:<12}{'-':<10}{'-':<7}")
 
     # SPMD engine: both data-plane paths must agree bit-for-bit (the sparse
     # masked-psum path moves only matched records; gather moves the full
     # P-row table — see EXPERIMENTS.md §Perf)
     spmd = {}
     for impl in ("sparse", "gather"):
-        r = solve(g, num_workers=8, steps_per_round=16, transfer_impl=impl)
-        assert r.best_size == best
+        session = SolverSession(config=SolveConfig(
+            num_workers=8, steps_per_round=16, transfer_impl=impl))
+        r = session.solve(g)
+        assert r.best_size == best.best_size
         spmd[impl] = r
         print(f"\nSPMD engine [{impl:>6}]: mvc={r.best_size}, "
               f"{r.rounds} supersteps, {r.tasks_transferred} transfers, "
-              f"{r.control_bytes_per_round} control B/round, "
-              f"{r.transfer_bytes_per_round:.1f} payload B/round")
+              f"{r.stats['control_bytes_per_round']} control B/round, "
+              f"{r.stats['transfer_bytes_per_round']:.1f} payload B/round")
     a, b = spmd["sparse"], spmd["gather"]
     assert a.best_size == b.best_size and (a.best_sol == b.best_sol).all()
     print("transfer paths bit-identical; sparse payload "
-          f"{a.transfer_bytes_total}B vs gather {b.transfer_bytes_total}B")
+          f"{a.stats['transfer_bytes_total']}B vs gather "
+          f"{b.stats['transfer_bytes_total']}B")
 
     # batched solve plane: mixed-size instances packed onto one executable,
-    # per-instance results bit-identical to solo solves
+    # per-instance results bit-identical to solo solves — and the session's
+    # compiled-plane cache makes the solo cross-checks warm after the first
     sizes = [n, max(n - 7, 8), max(n - 13, 6), n]
     graphs = [p_hat_like(m, density, seed=s) for s, m in enumerate(sizes)]
-    batch = solve_many(graphs, num_workers=8, steps_per_round=16)
+    session = SolverSession(config=SolveConfig(num_workers=8, steps_per_round=16))
+    batch = session.solve_many(graphs)
     print(f"\nsolve_many over {len(graphs)} mixed-size instances "
           f"(n={sizes}, {len(batch.buckets)} bucket(s)):")
     for g, r in zip(graphs, batch.results):
-        solo = solve(g, num_workers=8, steps_per_round=16)
+        solo = session.solve(g)
         assert (r.best_size, r.rounds) == (solo.best_size, solo.rounds)
         assert (r.best_sol == solo.best_sol).all()
         print(f"  n={g.n}: mvc={r.best_size} rounds={r.rounds} "
               f"(== solo solve, bit-identical)")
+    print(f"session cache after the cross-checks: {session.cache_stats()}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,46 @@
+"""``repro.api`` — the single public surface of the solve system.
+
+One config (:class:`SolveConfig`), one result schema (:class:`SolveResult`
+/ :class:`BatchSolveResult`), one façade (:class:`SolverSession`) over all
+backends (``spmd``, ``protocol_sim``, ``centralized``, ``sequential``),
+with a compiled-plane cache (:class:`PlaneCache`) so warm repeat solves
+reuse executables.
+
+Quickstart::
+
+    from repro.api import SolverSession, SolveConfig
+
+    session = SolverSession(problem="vertex_cover",
+                            config=SolveConfig(num_workers=8))
+    r = session.solve(g)            # SolveResult
+    batch = session.solve_many(gs)  # BatchSolveResult
+    session.cache_stats()           # warm/cold executable accounting
+
+``__all__`` below is the pinned public API — ``tests/test_arch_guard.py``
+snapshots it, so additions/removals are deliberate, reviewed changes.
+"""
+
+from repro.api.backends import (
+    Backend,
+    BACKENDS,
+    get_backend,
+    known_backends,
+)
+from repro.api.cache import CacheStats, PlaneCache
+from repro.api.config import SolveConfig
+from repro.api.result import BatchSolveResult, SolveResult
+from repro.api.session import SolverSession, solve_stream_session
+
+__all__ = [
+    "Backend",
+    "BACKENDS",
+    "BatchSolveResult",
+    "CacheStats",
+    "PlaneCache",
+    "SolveConfig",
+    "SolveResult",
+    "SolverSession",
+    "get_backend",
+    "known_backends",
+    "solve_stream_session",
+]

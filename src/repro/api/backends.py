@@ -1,0 +1,450 @@
+"""The ``Backend`` protocol and its four implementations.
+
+A backend turns ``(problem spec, graph(s), SolveConfig)`` into the unified
+:class:`~repro.api.result.SolveResult` schema:
+
+* ``spmd`` — the TPU-adapted superstep engine, driven through the
+  parametric compiled planes so a :class:`~repro.api.cache.PlaneCache`
+  makes warm repeat solves reuse executables;
+* ``protocol_sim`` — the faithful asynchronous MPI-protocol discrete-event
+  simulator (now problem-generic via the plugin's host callables);
+* ``centralized`` — the fully-centralized Abu-Khzam baseline (ditto);
+* ``sequential`` — the plugin's ground-truth reference solver.
+
+The module also hosts the legacy-shim entry points (``legacy_solve`` /
+``legacy_solve_many``) that keep ``repro.core.engine.solve``/``solve_many``
+working — those shims share one process-wide :data:`LEGACY_CACHE`, so even
+deprecated callers stop paying per-call re-compiles.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.cache import PlaneCache
+from repro.api.config import SolveConfig
+from repro.api.result import (
+    BatchSolveResult,
+    SolveResult,
+    from_engine_result,
+    from_sequential,
+    from_sim_result,
+)
+from repro.core import engine as _engine
+from repro.core.encoding import make_codec
+from repro.graphs.bitgraph import n_words
+from repro.problems import base as problems_base
+
+
+# -- the spmd drivers ----------------------------------------------------------
+#
+# Same solve loops as the legacy engine.solve/solve_many (whose helpers they
+# reuse — startup scatter, result extraction, bucketing are single-sourced
+# there), but the chunk executables come from a PlaneCache: ProblemData and
+# FPT bounds are call-time arguments, so same-shape solves never re-trace.
+
+
+def solve_spmd(
+    spec,
+    g,
+    cfg: SolveConfig,
+    cache: PlaneCache,
+    *,
+    initial_state=None,
+    mesh=None,
+):
+    """One instance on the SPMD engine; returns a legacy ``EngineResult``
+    (the session wraps it into the unified schema, the engine shim returns
+    it as-is)."""
+    k = cfg.solo_k()
+    W = n_words(g.n)
+    cap = cfg.capacity or (4 * g.n + 8 * cfg.lanes)
+    initial_best = problems_base.initial_bound(spec, g, cfg.mode, k)
+    data = problems_base.make_data(spec, g)
+    pad = make_codec(cfg.codec, g.n, problem=spec).pad_words
+
+    if initial_state is None:
+        state = jax.vmap(
+            lambda _: _engine.make_worker_state(cap, W, initial_best)
+        )(jnp.arange(cfg.num_workers))
+        state = _engine._scatter_startup(state, spec, g, cfg.num_workers)
+    else:
+        state = initial_state
+        cap = int(state.frontier.masks.shape[-2])
+
+    if mesh is None and cfg.use_mesh:
+        from repro.launch.mesh import make_solver_mesh
+
+        mesh = make_solver_mesh(cfg.num_workers)
+
+    use_fpt = cfg.mode == "fpt"
+    if mesh is not None:
+        # mesh planes close over their mesh/sharding: not cacheable (yet)
+        cache.note_bypass()
+        chunk = _engine.build_chunk_fn(
+            spec,
+            data,
+            num_workers=cfg.num_workers,
+            steps_per_round=cfg.steps_per_round,
+            lanes=cfg.lanes,
+            policy_priority=cfg.policy_priority,
+            transfer_pad_words=pad,
+            packed_status=cfg.packed_status,
+            skip_empty_transfer=cfg.skip_empty_transfer,
+            transfer_impl=cfg.transfer_impl,
+            donate_k=cfg.donate_k,
+            chunk_rounds=cfg.chunk_rounds,
+            fpt_bound=(spec.fpt_target(k) if use_fpt else None),
+            mesh=mesh,
+        )
+        step = lambda s: chunk(s)  # noqa: E731
+    else:
+        plane = cache.solo_plane(spec, cfg, pad, use_fpt)
+        cache.note(
+            "solo", spec, cfg, pad, use_fpt,
+            (g.n, W, cap, cfg.num_workers),
+        )
+        if use_fpt:
+            bound = jnp.int32(spec.fpt_target(k))
+            step = lambda s: plane(data, s, bound)  # noqa: E731
+        else:
+            step = lambda s: plane(data, s)  # noqa: E731
+
+    t0 = time.perf_counter()
+    rounds = 0
+    while rounds < cfg.max_rounds:
+        state, done, ran = step(state)
+        done, ran = jax.device_get((done, ran))
+        rounds += int(ran)
+        if bool(done):
+            break
+    wall = time.perf_counter() - t0
+
+    host = _engine._fetch_batch_state(jax.tree.map(lambda x: x[None], state))
+    return _engine._extract_result(
+        host,
+        0,
+        spec,
+        g,
+        rounds,
+        wall,
+        mode=cfg.mode,
+        k=k,
+        num_workers=cfg.num_workers,
+        packed_status=cfg.packed_status,
+    )
+
+
+def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
+    """B instances on one batched plane; returns a legacy ``BatchResult``.
+
+    Identical bucketing/padding/compaction behavior to the legacy
+    ``engine.solve_many``; the one structural difference is that compaction
+    RESLICES and keeps calling the same parametric plane function instead of
+    rebuilding an executable, so a compacted width that was seen before
+    (this call or any earlier one) is already warm.
+    """
+    if cfg.use_mesh:
+        raise ValueError(
+            "solve_many has no mesh path yet (vmap virtual workers only); "
+            "use solve() per instance or a config with use_mesh=False"
+        )
+    graphs = list(graphs)
+    B = len(graphs)
+    use_fpt = cfg.mode == "fpt"
+    if use_fpt:
+        ks = list(cfg.k) if isinstance(cfg.k, tuple) else [cfg.k] * B
+        if len(ks) != B or any(kk is None for kk in ks):
+            raise ValueError("fpt mode needs one k (or one per instance)")
+    else:
+        ks = [None] * B
+    results: dict = {}
+    bucket_record = []
+    compactions = 0
+    wall_total = 0.0
+
+    buckets = _engine._bucket_instances(graphs, by_n=(cfg.codec == "basic"))
+    for (W, _), idxs in sorted(buckets.items()):
+        t0 = time.perf_counter()
+        bucket_graphs = [graphs[i] for i in idxs]
+        n_max = max(g.n for g in bucket_graphs)
+        bucket_record.append((W, n_max, list(idxs)))
+        cap = cfg.capacity or (4 * n_max + 8 * cfg.lanes)
+        pad = make_codec(cfg.codec, n_max, problem=spec).pad_words
+        initial_bests = [
+            problems_base.initial_bound(spec, g, cfg.mode, ks[i])
+            for i, g in zip(idxs, bucket_graphs)
+        ]
+
+        datas = problems_base.make_batch_data(spec, bucket_graphs, n_max, W)
+        state = _engine._make_batch_state(
+            spec, bucket_graphs, cfg.num_workers, cap, W, initial_bests
+        )
+        fpt_bounds = (
+            jnp.asarray(np.array([spec.fpt_target(ks[i]) for i in idxs], np.int32))
+            if use_fpt
+            else None
+        )
+
+        plane = cache.batch_plane(spec, cfg, pad, use_fpt)
+
+        def note(n_lanes):
+            cache.note(
+                "batch", spec, cfg, pad, use_fpt,
+                (n_max, W, cap, cfg.num_workers, n_lanes),
+            )
+
+        def chunk(state, done, bounds):
+            if use_fpt:
+                return plane(datas, state, done, bounds)
+            return plane(datas, state, done)
+
+        note(len(idxs))
+        lanes_orig = np.array(idxs)  # lane -> original instance index
+        done = jnp.zeros((len(idxs),), bool)
+        rounds_done = np.zeros(B, np.int64)
+        total_ran = 0
+        while total_ran < cfg.max_rounds:
+            state, done, delta, ran = chunk(state, done, fpt_bounds)
+            done_h, delta_h, ran_h = jax.device_get((done, delta, ran))
+            rounds_done[lanes_orig] += np.asarray(delta_h)
+            total_ran += int(ran_h)
+            done_h = np.asarray(done_h)
+            if done_h.all():
+                break
+            n_live = int((~done_h).sum())
+            n_lanes = len(lanes_orig)
+            target = _engine._pow2_at_least(n_live)
+            if (
+                cfg.compact_threshold > 0
+                and n_live <= cfg.compact_threshold * n_lanes
+                and target < n_lanes
+            ):
+                # collect finished lanes now, keep live ones (plus frozen
+                # finished fillers up to the pow2 target), reslice every
+                # tensor — the SAME plane function serves the new width.
+                host = _engine._fetch_batch_state(state)
+                live = np.flatnonzero(~done_h)
+                fillers = np.flatnonzero(done_h)[: target - n_live]
+                for lane in np.flatnonzero(done_h):
+                    oi = int(lanes_orig[lane])
+                    if oi not in results and lane not in fillers:
+                        results[oi] = (lane, host, int(rounds_done[oi]))
+                sel = np.concatenate([live, fillers]).astype(np.int64)
+                state = jax.tree.map(lambda x: x[sel], state)
+                datas = problems_base.slice_instances(datas, sel)
+                if fpt_bounds is not None:
+                    fpt_bounds = fpt_bounds[sel]
+                done = jnp.asarray(done_h[sel])
+                lanes_orig = lanes_orig[sel]
+                compactions += 1
+                note(len(lanes_orig))
+
+        host = _engine._fetch_batch_state(state)
+        for lane, oi in enumerate(lanes_orig):
+            oi = int(oi)
+            if oi not in results:
+                results[oi] = (lane, host, int(rounds_done[oi]))
+        bucket_wall = time.perf_counter() - t0
+        wall_total += bucket_wall
+        per_wall = bucket_wall / max(len(idxs), 1)
+        for oi in idxs:
+            lane, host_i, rounds_i = results[oi]
+            results[oi] = _engine._extract_result(
+                host_i,
+                lane,
+                spec,
+                graphs[oi],
+                rounds_i,
+                per_wall,
+                mode=cfg.mode,
+                k=ks[oi],
+                num_workers=cfg.num_workers,
+                packed_status=cfg.packed_status,
+            )
+
+    return _engine.BatchResult(
+        results=[results[i] for i in range(B)],
+        wall_s=wall_total,
+        buckets=bucket_record,
+        compactions=compactions,
+    )
+
+
+# -- the Backend protocol ------------------------------------------------------
+
+
+class Backend:
+    """One engine behind the session façade.
+
+    ``solve``/``solve_many`` take the RESOLVED problem spec, the validated
+    config and the session's plane cache, and return the unified schema.
+    The default ``solve_many`` loops ``solve`` per instance (honoring
+    per-instance ``k`` tuples); backends with a real batch plane override.
+    """
+
+    name: str = "?"
+
+    def solve(self, spec, g, cfg: SolveConfig, cache: PlaneCache) -> SolveResult:
+        raise NotImplementedError
+
+    def solve_many(
+        self, spec, graphs, cfg: SolveConfig, cache: PlaneCache
+    ) -> BatchSolveResult:
+        graphs = list(graphs)
+        ks = (
+            list(cfg.k)
+            if isinstance(cfg.k, tuple)
+            else [cfg.k] * len(graphs)
+        )
+        if len(ks) != len(graphs):
+            raise ValueError("per-instance k needs one entry per graph")
+        out = [
+            self.solve(spec, g, cfg.replace(k=kk), cache)
+            for g, kk in zip(graphs, ks)
+        ]
+        return BatchSolveResult(
+            problem=spec.name,
+            backend=self.name,
+            results=out,
+            wall_s=sum(r.wall_s for r in out),
+        )
+
+
+class SpmdBackend(Backend):
+    name = "spmd"
+
+    def solve(self, spec, g, cfg, cache, *, initial_state=None, mesh=None):
+        r = solve_spmd(spec, g, cfg, cache, initial_state=initial_state, mesh=mesh)
+        return from_engine_result(r, problem=spec.name, backend=self.name)
+
+    def solve_many(self, spec, graphs, cfg, cache):
+        br = solve_many_spmd(spec, graphs, cfg, cache)
+        return BatchSolveResult(
+            problem=spec.name,
+            backend=self.name,
+            results=[
+                from_engine_result(r, problem=spec.name, backend=self.name)
+                for r in br.results
+            ],
+            wall_s=br.wall_s,
+            buckets=br.buckets,
+            compactions=br.compactions,
+        )
+
+
+class ProtocolSimBackend(Backend):
+    name = "protocol_sim"
+
+    def solve(self, spec, g, cfg, cache):
+        from repro.core.protocol_sim import run_protocol_sim
+
+        t0 = time.perf_counter()
+        r = run_protocol_sim(
+            g,
+            num_workers=cfg.num_workers,
+            latency=cfg.latency,
+            policy=cfg.policy,
+            codec_name=cfg.codec,
+            mode=cfg.mode,
+            k=cfg.solo_k(),
+            send_metadata=cfg.send_metadata,
+            max_ticks=cfg.max_ticks,
+            seed=cfg.seed,
+            problem=spec,
+        )
+        wall = time.perf_counter() - t0
+        return from_sim_result(r, problem=spec.name, backend=self.name, wall_s=wall)
+
+
+class CentralizedBackend(Backend):
+    name = "centralized"
+
+    def solve(self, spec, g, cfg, cache):
+        from repro.core.centralized import run_centralized_sim
+
+        t0 = time.perf_counter()
+        r = run_centralized_sim(
+            g,
+            num_workers=cfg.num_workers,
+            latency=cfg.latency,
+            codec_name=cfg.codec,
+            queue_cap_per_p=cfg.queue_cap_per_p,
+            use_priority_queue=cfg.use_priority_queue,
+            max_ticks=cfg.max_ticks,
+            mode=cfg.mode,
+            k=cfg.solo_k(),
+            problem=spec,
+        )
+        wall = time.perf_counter() - t0
+        return from_sim_result(r, problem=spec.name, backend=self.name, wall_s=wall)
+
+
+class SequentialBackend(Backend):
+    name = "sequential"
+
+    def solve(self, spec, g, cfg, cache):
+        if spec.sequential is None:
+            raise ValueError(f"problem {spec.name!r} has no sequential reference")
+        t0 = time.perf_counter()
+        best, sol, stats = spec.sequential(g, mode=cfg.mode, k=cfg.solo_k())
+        wall = time.perf_counter() - t0
+        return from_sequential(best, sol, stats, problem=spec.name, wall_s=wall)
+
+
+# -- backend registry ----------------------------------------------------------
+
+BACKENDS = {
+    b.name: b
+    for b in (
+        SpmdBackend(),
+        ProtocolSimBackend(),
+        CentralizedBackend(),
+        SequentialBackend(),
+    )
+}
+
+BACKEND_ALIASES = {
+    "protocol": "protocol_sim",
+    "central": "centralized",
+    "centralised": "centralized",
+    "seq": "sequential",
+}
+
+
+def known_backends() -> list:
+    return sorted(BACKENDS)
+
+
+def get_backend(name) -> Backend:
+    """Resolve a backend by name (or pass an instance through); unknown
+    names raise a ``ValueError`` listing what IS available."""
+    if isinstance(name, Backend):
+        return name
+    key = BACKEND_ALIASES.get(name, name)
+    if key not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {name!r}; known backends: "
+            f"{', '.join(known_backends())} "
+            f"(aliases: {', '.join(sorted(BACKEND_ALIASES))})"
+        )
+    return BACKENDS[key]
+
+
+# -- legacy engine shim plumbing -----------------------------------------------
+
+#: one process-wide cache for the deprecated ``engine.solve``/``solve_many``
+#: shims — legacy callers pool their executables too.
+LEGACY_CACHE = PlaneCache()
+
+
+def config_from_legacy(policy_priority: bool = True, **kw) -> SolveConfig:
+    """Map the legacy kwargs surface onto :class:`SolveConfig`."""
+    return SolveConfig(
+        policy=("priority" if policy_priority else "random"), **kw
+    )

@@ -1,0 +1,168 @@
+"""``SolveConfig``: every tuning knob of every backend, validated once.
+
+Before this layer, ``engine.solve`` / ``engine.solve_many`` / the two
+discrete-event simulators each grew their own ~15-keyword sprawl, and the
+knob sets drifted (``mesh`` accepted by one, ``compact_threshold`` by the
+other).  ``SolveConfig`` is the frozen superset: one immutable, hashable
+dataclass that
+
+* validates once at construction (enum knobs against their registries,
+  integer ranges, mode/k coupling) and fails with the list of valid values;
+* round-trips through JSON (``to_json``/``from_json``, ``save``/``load``)
+  so a solve is reproducible from a config file — the ``launch.solve
+  --config / --dump-config`` flow;
+* is the compiled-plane cache key material: equal configs mean reusable
+  executables (see :mod:`repro.api.cache`).
+
+Backends read the subset they understand; unknown-to-a-backend knobs are
+simply inert there (that is what kills the kwargs drift).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Union
+
+_MODES = ("bnb", "fpt")
+_POLICIES = ("priority", "random")
+_TRANSFER_IMPLS = ("sparse", "gather")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveConfig:
+    """Frozen superset of all solve-plane tuning knobs.
+
+    SPMD engine knobs mirror :func:`repro.core.engine.solve` /
+    ``solve_many``; ``latency`` onward configure the discrete-event
+    simulator backends (``protocol_sim`` / ``centralized``).  ``policy``
+    replaces the old ``policy_priority`` bool and doubles as the simulator
+    center's policy name.
+    """
+
+    # -- SPMD engine ----------------------------------------------------------
+    num_workers: int = 8
+    steps_per_round: int = 32
+    lanes: int = 1
+    policy: str = "priority"
+    codec: str = "optimized"
+    packed_status: bool = True
+    skip_empty_transfer: bool = True
+    transfer_impl: str = "sparse"
+    donate_k: int = 1
+    chunk_rounds: int = 16
+    mode: str = "bnb"
+    # fpt decision target: one int, or (solve_many) one per instance
+    k: Optional[Union[int, tuple]] = None
+    max_rounds: int = 200_000
+    capacity: Optional[int] = None
+    compact_threshold: float = 0.25
+    use_mesh: bool = False
+    # -- session admission (submit()/flush() via serving.SolveBatcher) --------
+    batch_size: int = 8
+    # -- discrete-event simulator backends ------------------------------------
+    latency: int = 1
+    seed: int = 0
+    send_metadata: bool = False
+    max_ticks: int = 2_000_000
+    queue_cap_per_p: int = 1000
+    use_priority_queue: bool = True
+
+    def __post_init__(self):
+        if isinstance(self.k, list):
+            object.__setattr__(self, "k", tuple(self.k))
+        self._validate()
+
+    # -- validation (once, here — not scattered across engines) ---------------
+
+    def _validate(self) -> None:
+        def choice(name, value, valid):
+            if value not in valid:
+                raise ValueError(
+                    f"SolveConfig.{name}={value!r}; valid: {', '.join(valid)}"
+                )
+
+        choice("mode", self.mode, _MODES)
+        choice("policy", self.policy, _POLICIES)
+        choice("transfer_impl", self.transfer_impl, _TRANSFER_IMPLS)
+        # codec names live in the encoding registry — same fail-helpfully
+        # contract as the problem registry
+        from repro.core.encoding import make_codec
+
+        make_codec(self.codec, 1)
+        for name in (
+            "num_workers", "steps_per_round", "lanes", "donate_k",
+            "chunk_rounds", "max_rounds", "batch_size", "max_ticks",
+            "queue_cap_per_p",
+        ):
+            v = getattr(self, name)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+                raise ValueError(f"SolveConfig.{name} must be an int >= 1, got {v!r}")
+        if self.latency < 1:
+            raise ValueError(f"SolveConfig.latency must be >= 1, got {self.latency!r}")
+        if self.capacity is not None and self.capacity < 1:
+            raise ValueError(f"SolveConfig.capacity must be None or >= 1")
+        if not 0 <= self.compact_threshold <= 1:
+            raise ValueError(
+                f"SolveConfig.compact_threshold must be in [0, 1], "
+                f"got {self.compact_threshold!r}"
+            )
+        if self.mode == "fpt" and self.k is None:
+            raise ValueError("SolveConfig: mode='fpt' requires k")
+
+    # -- derived views ---------------------------------------------------------
+
+    @property
+    def policy_priority(self) -> bool:
+        """The SPMD engine's bool view of ``policy``."""
+        return self.policy == "priority"
+
+    def solo_k(self) -> Optional[int]:
+        """``k`` for a single-instance solve (per-instance tuples rejected)."""
+        if isinstance(self.k, tuple):
+            raise ValueError(
+                "SolveConfig.k is a per-instance sequence; a solo solve "
+                "needs one int"
+            )
+        return self.k
+
+    # -- functional update -----------------------------------------------------
+
+    def replace(self, **overrides) -> "SolveConfig":
+        """A new validated config with ``overrides`` applied."""
+        return dataclasses.replace(self, **overrides)
+
+    # -- JSON round-trip -------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        if isinstance(d["k"], tuple):
+            d["k"] = list(d["k"])
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SolveConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise ValueError(
+                f"unknown SolveConfig key(s): {', '.join(unknown)}; "
+                f"known: {', '.join(sorted(known))}"
+            )
+        return cls(**d)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent) + "\n"
+
+    @classmethod
+    def from_json(cls, text: str) -> "SolveConfig":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path) -> "SolveConfig":
+        with open(path) as f:
+            return cls.from_json(f.read())

@@ -1,0 +1,152 @@
+"""The unified result schema every backend returns.
+
+Before this layer each engine had its own result type — ``EngineResult``
+(SPMD), ``SimResult`` (both discrete-event simulators), bare tuples
+(sequential reference) — so callers special-cased per backend.
+:class:`SolveResult` is the one schema: the solution and the universally
+meaningful counters are first-class fields, and everything
+backend-specific (byte accounting, message histograms, overflow flags)
+rides in ``stats`` under stable keys.  :class:`BatchSolveResult` is the
+``solve_many`` analogue, preserving submission order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SolveResult:
+    """One instance solved by one backend.
+
+    ``best_size`` is in the problem's EXTERNAL objective (``-1`` for an
+    unsatisfiable FPT decision); ``rounds`` counts the backend's native
+    progress unit (supersteps for spmd, simulator ticks for the two
+    discrete-event backends, expanded nodes for sequential).
+    """
+
+    problem: str
+    backend: str
+    best_size: int
+    best_sol: Optional[np.ndarray]
+    found: bool
+    wall_s: float
+    rounds: int
+    nodes_expanded: int
+    tasks_transferred: int
+    stats: dict = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        """JSON-safe view (``best_sol`` as a list of packed u32 words)."""
+        d = dataclasses.asdict(self)
+        if self.best_sol is not None:
+            d["best_sol"] = [int(w) for w in np.asarray(self.best_sol, np.uint32)]
+        d["stats"] = _jsonable(self.stats)
+        return d
+
+
+@dataclasses.dataclass
+class BatchSolveResult:
+    """Per-instance results of one batched solve; ``results[i]`` corresponds
+    to ``graphs[i]`` (submission order survives bucketing/compaction).
+
+    ``buckets`` is the packing record — one ``(W, n_max, [indices])`` triple
+    per compiled bucket (empty for backends that solve instance-by-
+    instance); ``compactions`` counts host-side batch compactions.
+    """
+
+    problem: str
+    backend: str
+    results: list
+    wall_s: float
+    buckets: list = dataclasses.field(default_factory=list)
+    compactions: int = 0
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __iter__(self):
+        return iter(self.results)
+
+
+def _jsonable(obj):
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.generic):
+        return obj.item()
+    return obj
+
+
+# -- converters from the legacy per-engine schemas -----------------------------
+
+
+def from_engine_result(r, *, problem: str, backend: str = "spmd") -> SolveResult:
+    """Wrap a :class:`repro.core.engine.EngineResult`."""
+    return SolveResult(
+        problem=problem,
+        backend=backend,
+        best_size=r.best_size,
+        best_sol=r.best_sol,
+        found=r.best_sol is not None,
+        wall_s=r.wall_s,
+        rounds=r.rounds,
+        nodes_expanded=r.nodes_expanded,
+        tasks_transferred=r.tasks_transferred,
+        stats={
+            "overflow": r.overflow,
+            "control_bytes_per_round": r.control_bytes_per_round,
+            "transfer_rounds": r.transfer_rounds,
+            "transfer_bytes_total": r.transfer_bytes_total,
+            "transfer_bytes_per_round": r.transfer_bytes_per_round,
+        },
+    )
+
+
+def from_sim_result(r, *, problem: str, backend: str, wall_s: float) -> SolveResult:
+    """Wrap a :class:`repro.core.protocol_sim.SimResult` (both simulators)."""
+    s = r.stats
+    return SolveResult(
+        problem=problem,
+        backend=backend,
+        best_size=r.best_size,
+        best_sol=r.best_sol,
+        found=r.best_sol is not None,
+        wall_s=wall_s,
+        rounds=r.ticks,
+        nodes_expanded=s.nodes_expanded,
+        tasks_transferred=s.tasks_transferred,
+        stats={
+            "ticks": r.ticks,
+            "failed_requests": s.failed_requests,
+            "termination_cancelled": s.termination_cancelled,
+            "total_bytes": s.total_bytes,
+            "center_bytes": s.center_bytes,
+            "msg_count": dict(s.msg_count),
+            "msg_bytes": dict(s.msg_bytes),
+        },
+    )
+
+
+def from_sequential(best, sol, stats, *, problem: str, wall_s: float) -> SolveResult:
+    """Wrap the sequential reference's ``(best, sol, SeqStats)`` triple."""
+    return SolveResult(
+        problem=problem,
+        backend="sequential",
+        best_size=best,
+        best_sol=sol,
+        found=sol is not None,
+        wall_s=wall_s,
+        rounds=stats.nodes,
+        nodes_expanded=stats.nodes,
+        tasks_transferred=0,
+        stats={
+            "pruned": stats.pruned,
+            "solutions": stats.solutions,
+            "max_depth": stats.max_depth,
+        },
+    )

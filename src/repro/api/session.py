@@ -1,0 +1,183 @@
+"""``SolverSession``: the one public way to solve branching problems.
+
+A session binds (problem, backend, config) once and exposes three verbs:
+
+* ``solve(g)`` — one instance, unified :class:`SolveResult`;
+* ``solve_many(graphs)`` — B instances on one batched plane (spmd) or an
+  instance loop (simulator backends), unified :class:`BatchSolveResult`;
+* ``submit(g) -> ticket`` / ``poll()`` / ``flush()`` — asynchronous
+  admission through the serving :class:`~repro.serving.balancer.
+  SolveBatcher`: requests queue until a full ``batch_size`` plane is
+  admissible (``poll``) or the stream ends (``flush``), and every solved
+  ticket's result is retrievable via ``result(ticket)``.
+
+The session owns a :class:`~repro.api.cache.PlaneCache` (or shares one
+passed in), so warm repeat solves of the same (problem, codec, shape,
+config) reuse compiled executables instead of re-tracing —
+``cache_stats()`` exposes the hit/miss/trace accounting.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.api.backends import Backend, SpmdBackend, get_backend
+from repro.api.cache import PlaneCache
+from repro.api.config import SolveConfig
+from repro.api.result import BatchSolveResult, SolveResult
+from repro.problems.registry import DEFAULT_PROBLEM, get_problem
+
+
+class SolverSession:
+    """One façade over all backends, with executable reuse across solves.
+
+    >>> session = SolverSession(problem="max_clique", backend="spmd",
+    ...                         config=SolveConfig(num_workers=8))
+    >>> session.solve(g).best_size
+    >>> session.solve_many(graphs).results
+    >>> t = session.submit(g); session.flush(); session.result(t)
+
+    ``problem`` is a registry name or spec; ``backend`` one of
+    ``spmd | protocol_sim | centralized | sequential`` (see
+    :func:`repro.api.backends.known_backends`).  Keyword overrides are
+    applied on top of ``config``:  ``SolverSession(num_workers=4)``.
+    """
+
+    def __init__(
+        self,
+        problem=DEFAULT_PROBLEM,
+        backend="spmd",
+        config: Optional[SolveConfig] = None,
+        *,
+        cache: Optional[PlaneCache] = None,
+        **overrides,
+    ):
+        self.problem = get_problem(problem)
+        self.backend: Backend = get_backend(backend)
+        cfg = config if config is not None else SolveConfig()
+        if overrides:
+            cfg = cfg.replace(**overrides)
+        self.config = cfg
+        self.cache = cache if cache is not None else PlaneCache()
+        self._batcher = None  # lazy serving.SolveBatcher
+        self._results: dict = {}  # ticket -> SolveResult
+
+    # -- synchronous solves ----------------------------------------------------
+
+    def solve(self, g, **backend_kw) -> SolveResult:
+        """Solve one instance; ``backend_kw`` passes backend-specific extras
+        (spmd: ``initial_state``, ``mesh``)."""
+        return self.backend.solve(
+            self.problem, g, self.config, self.cache, **backend_kw
+        )
+
+    def solve_many(self, graphs) -> BatchSolveResult:
+        return self.backend.solve_many(
+            self.problem, list(graphs), self.config, self.cache
+        )
+
+    # -- asynchronous admission (the serving front) ----------------------------
+
+    def submit(self, g) -> int:
+        """Queue one instance for batched solving; returns its ticket.
+
+        Tickets solve when a full ``config.batch_size`` plane accumulates
+        (``poll``) or on ``flush()``; results are kept until ``result`` is
+        called (which pops them).
+        """
+        if self._batcher is None:
+            from repro.serving.balancer import SolveBatcher
+
+            self._batcher = SolveBatcher(self.config.batch_size)
+        return self._batcher.submit(g, self.problem.name)
+
+    def poll(self) -> list:
+        """Solve every currently FULL batch; returns the tickets solved."""
+        if self._batcher is None:
+            return []
+        return self._run_batches(self._batcher.ready_batches())
+
+    def flush(self) -> list:
+        """Solve everything still queued (full and partial batches);
+        returns the tickets solved."""
+        if self._batcher is None:
+            return []
+        return self._run_batches(self._batcher.flush())
+
+    def result(self, ticket: int) -> SolveResult:
+        """Pop a solved ticket's result (KeyError if unknown or unsolved —
+        call ``poll``/``flush`` first)."""
+        return self._results.pop(ticket)
+
+    def pending(self) -> int:
+        """Tickets submitted but not yet solved."""
+        if self._batcher is None:
+            return 0
+        return len(self._batcher.graphs)
+
+    def _run_batches(self, batches) -> list:
+        solved = []
+        for tickets in batches:
+            gs = self._batcher.take(tickets)
+            batch = self.solve_many(gs)
+            for t, r in zip(tickets, batch.results):
+                self._results[t] = r
+            solved.extend(tickets)
+        return solved
+
+    # -- introspection ---------------------------------------------------------
+
+    def cache_stats(self) -> dict:
+        """Warm/cold compiled-plane accounting (see
+        :class:`~repro.api.cache.CacheStats`)."""
+        return self.cache.stats().to_dict()
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (
+            f"SolverSession(problem={self.problem.name!r}, "
+            f"backend={self.backend.name!r})"
+        )
+
+
+def solve_stream_session(
+    graphs,
+    batch_size: int,
+    *,
+    problem=DEFAULT_PROBLEM,
+    config: Optional[SolveConfig] = None,
+    cache: Optional[PlaneCache] = None,
+    backend="spmd",
+) -> list:
+    """Session-backed stream solver: one :class:`SolverSession` per problem
+    in the stream, ALL sharing one :class:`PlaneCache` — so a mixed request
+    stream replaying the same (problem, W, B) planes pays each compile once.
+    Returns per-instance :class:`SolveResult` in submission order.
+
+    This is what :func:`repro.serving.balancer.solve_stream` drives when no
+    explicit solver is injected.
+    """
+    graphs = list(graphs)
+    probs = [problem] * len(graphs) if isinstance(problem, str) else list(problem)
+    if len(probs) != len(graphs):
+        raise ValueError("need one problem, or one per instance")
+    cache = cache if cache is not None else PlaneCache()
+    cfg = config if config is not None else SolveConfig()
+    sessions: dict = {}
+    tickets = []
+    for g, p in zip(graphs, probs):
+        name = get_problem(p).name
+        if name not in sessions:
+            sessions[name] = SolverSession(
+                problem=name,
+                backend=backend,
+                config=cfg.replace(batch_size=batch_size),
+                cache=cache,
+            )
+        tickets.append((name, sessions[name].submit(g)))
+    for s in sessions.values():
+        s.flush()
+    return [sessions[name].result(t) for name, t in tickets]
+
+
+# re-exported for the quickstart; the spmd backend is the common default
+__all__ = ["SolverSession", "SolveConfig", "SpmdBackend", "solve_stream_session"]

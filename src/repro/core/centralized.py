@@ -30,24 +30,33 @@ from repro.core.encoding import Task, make_codec
 from repro.core.protocol_sim import SimResult, SimStats, _Network
 from repro.core.task_tree import TaskTree
 from repro.graphs.bitgraph import BitGraph, mask_full, popcount_rows
-from repro.problems.sequential import branch_once, lower_bound
+from repro.problems import base as problems_base
+from repro.problems.registry import DEFAULT_PROBLEM, get_problem
 
 CENTER = 0
 
 
 class _CWorker:
-    """Worker under the centralized scheme: explores, ships tasks to center."""
+    """Worker under the centralized scheme: explores, ships tasks to center.
 
-    def __init__(self, wid: int, g: BitGraph, net: _Network, stats: SimStats):
+    Like :class:`repro.core.protocol_sim._Worker`, branching/bounding go
+    through the problem's host callables (internal minimization sense), so
+    the baseline runs any registry problem with host plumbing."""
+
+    def __init__(
+        self, wid: int, g: BitGraph, net: _Network, stats: SimStats,
+        problem: problems_base.BranchingProblem, initial_best: int,
+    ):
         self.wid = wid
         self.g = g
         self.net = net
         self.stats = stats
+        self.problem = problem
         self.tree = TaskTree()
         self.stack: list[list] = []
-        self.local_best = g.n + 1
+        self.local_best = initial_best
         self.local_best_sol: Optional[np.ndarray] = None
-        self.global_best_seen = g.n + 1
+        self.global_best_seen = initial_best
         self.center_full = False
         self.announced_available = False
 
@@ -84,17 +93,17 @@ class _CWorker:
         task, children, idx = frame
         if children is None:
             self.stats.nodes_expanded += 1
-            sol_size = int(popcount_rows(task.sol_mask))
-            if sol_size + lower_bound(self.g, task.mask) >= self.bound():
+            spec = self.problem
+            if spec.host_task_bound(self.g, task.mask, task.sol_mask) >= self.bound():
                 self._finish(task)
                 return
-            kids, terminal = branch_once(self.g, task.mask, task.sol_mask)
+            kids, terminal = spec.branch_once_host(self.g, task.mask, task.sol_mask)
             if terminal is not None:
-                tsize = int(popcount_rows(terminal[1]))
-                if tsize < self.bound():
-                    self.local_best = tsize
+                tval = int(spec.host_terminal_value(self.g, terminal[0], terminal[1]))
+                if tval < self.bound():
+                    self.local_best = tval
                     self.local_best_sol = terminal[1]
-                    self.net.send(self.wid, CENTER, "bestval_update", tsize, now)
+                    self.net.send(self.wid, CENTER, "bestval_update", tval, now)
                 self._finish(task)
                 return
             child_tasks = [
@@ -142,22 +151,33 @@ def run_centralized_sim(
     queue_cap_per_p: int = 1000,
     use_priority_queue: bool = True,
     max_ticks: int = 2_000_000,
+    mode: str = "bnb",
+    k: Optional[int] = None,
+    problem=DEFAULT_PROBLEM,
 ) -> SimResult:
+    spec = problems_base.require_host_bounds(get_problem(problem))
+    view = spec.host_view(g)
+    initial = problems_base.initial_bound(spec, view, mode, k)
     stats = SimStats()
-    codec = make_codec(codec_name, g.n)
+    codec = make_codec(codec_name, view.n, problem=spec)
     net = _Network(latency=latency, stats=stats, codec=codec)
-    workers = {i: _CWorker(i, g, net, stats) for i in range(1, num_workers + 1)}
+    workers = {
+        i: _CWorker(i, view, net, stats, spec, initial)
+        for i in range(1, num_workers + 1)
+    }
 
     # center state
     queue: list = []  # heap of (-instance_size, seq, Task) | FIFO list
     seq = 0
-    best_val = g.n + 1
+    best_val = initial
     status_available: set[int] = set()
     full = False
     cap = queue_cap_per_p * num_workers
 
     # startup: original instance to worker 1 (§4.2)
-    seed = Task(mask=mask_full(g.n), sol_mask=np.zeros(g.W, np.uint32), depth=0)
+    seed = Task(
+        mask=mask_full(view.n), sol_mask=np.zeros(view.W, np.uint32), depth=0
+    )
     workers[1]._start_task(seed)
 
     now = 0
@@ -174,8 +194,9 @@ def run_centralized_sim(
                 status_available.add(m.src)
             elif m.tag == "task_upload":
                 task: Task = m.data
-                # prune on arrival against the current bound
-                if int(popcount_rows(task.sol_mask)) < best_val:
+                # prune on arrival against the current bound (cheap birth
+                # bound — the problem's host_child_bound)
+                if spec.host_child_bound(view, task.mask, task.sol_mask) < best_val:
                     seq += 1
                     size = int(popcount_rows(task.mask))
                     if use_priority_queue:
@@ -209,6 +230,10 @@ def run_centralized_sim(
         ):
             break
 
+        # ---- fpt early stop: the internal decision target was reached ----
+        if mode == "fpt" and best_val <= spec.fpt_target(k):
+            break
+
         # ---- workers ----
         for wid, wk in workers.items():
             wk.update_ipc(now)
@@ -217,10 +242,16 @@ def run_centralized_sim(
             wk.maybe_announce(now)
 
     stats.ticks = now
-    best_size = g.n + 1
+    internal_best = initial
     best_sol = None
     for wk in workers.values():
-        if wk.local_best < best_size:
-            best_size = wk.local_best
+        if wk.local_best < internal_best:
+            internal_best = wk.local_best
             best_sol = wk.local_best_sol
+    found = internal_best < initial
+    best_size = int(spec.external_value(internal_best))
+    if not found:
+        best_sol = None
+        if mode == "fpt":
+            best_size = -1
     return SimResult(best_size, best_sol, stats, now)

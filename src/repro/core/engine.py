@@ -1,5 +1,13 @@
 """Host driver for the SPMD branching engine.
 
+NOTE (PR 4): the public entry points are now :class:`repro.api.SolverSession`
+(+ :class:`repro.api.SolveConfig`); ``solve``/``solve_many`` below are thin
+deprecated shims over the session drivers in :mod:`repro.api.backends`,
+which reuse this module's helpers (startup scatter, batch state stacking,
+result extraction) as their single source of truth.  The legacy result
+types (``EngineResult``/``BatchResult``) and the elasticity API
+(``snapshot``/``restore``/``resize``) live on here.
+
 Responsibilities (the paper's startup/termination bookkeeping):
 
 * **startup** (§3.5): expand the root on the host until ≥ P open tasks exist
@@ -26,17 +34,15 @@ Responsibilities (the paper's startup/termination bookkeeping):
 from __future__ import annotations
 
 import dataclasses
-import time
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.encoding import make_codec
 from repro.core.superstep import (
     WorkerState,
-    build_batch_chunk_fn,
     build_chunk_fn,
     make_worker_state,
 )
@@ -128,75 +134,46 @@ def solve(
     max_rounds: int = 200_000,
     capacity: Optional[int] = None,
     initial_state: Optional[WorkerState] = None,
+    compact_threshold: float = 0.25,
 ) -> EngineResult:
-    """Solve one instance of ``problem`` with P workers (virtual or
-    one-per-device).  ``problem`` is a registry name (or a
-    :class:`~repro.problems.base.BranchingProblem` spec).
+    """DEPRECATED shim over :class:`repro.api.SolverSession` — solve one
+    instance of ``problem`` with P workers (virtual or one-per-device).
 
-    ``chunk_rounds`` supersteps run per host sync (device-resident while
-    loop); ``chunk_rounds=1`` reproduces the old per-round host loop for A/B
-    benchmarking.  ``transfer_impl``/``donate_k`` select the data-plane path
-    (see :func:`repro.core.superstep.superstep`).  ``max_rounds`` is a safety
-    valve, enforced at chunk granularity (the run may overshoot it by at most
-    ``chunk_rounds - 1`` supersteps).
+    Prefer ``SolverSession(problem=..., config=SolveConfig(...)).solve(g)``:
+    the session validates the knobs once, returns the unified result schema
+    and caches compiled planes across solves.  This shim maps the legacy
+    kwargs onto :class:`~repro.api.SolveConfig` (it now accepts the full
+    knob superset — ``compact_threshold`` is accepted-and-inert here, fixing
+    the historical solve/solve_many kwargs drift) and shares one
+    process-wide plane cache, then returns the legacy ``EngineResult``.
     """
+    warnings.warn(
+        "engine.solve is deprecated; use repro.api.SolverSession(...).solve",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.api import backends as _api
+
     spec = get_problem(problem)
-    W = n_words(g.n)
-    cap = capacity or (4 * g.n + 8 * lanes)
-    initial_best = problems_base.initial_bound(spec, g, mode, k)
-    data = problems_base.make_data(spec, g)
-    # §4.3 codec payload (validates the codec name against the registry)
-    pad = make_codec(codec, g.n, problem=spec).pad_words
-
-    if initial_state is None:
-        state = jax.vmap(lambda _: make_worker_state(cap, W, initial_best))(
-            jnp.arange(num_workers)
-        )
-        state = _scatter_startup(state, spec, g, num_workers)
-    else:
-        state = initial_state
-
-    chunk_fn = build_chunk_fn(
-        spec,
-        data,
+    cfg = _api.config_from_legacy(
+        policy_priority=policy_priority,
         num_workers=num_workers,
         steps_per_round=steps_per_round,
         lanes=lanes,
-        policy_priority=policy_priority,
-        transfer_pad_words=pad,
+        codec=codec,
         packed_status=packed_status,
         skip_empty_transfer=skip_empty_transfer,
         transfer_impl=transfer_impl,
         donate_k=donate_k,
         chunk_rounds=chunk_rounds,
-        fpt_bound=(spec.fpt_target(k) if mode == "fpt" else None),
-        mesh=mesh,
-    )
-
-    t0 = time.perf_counter()
-    rounds = 0
-    while rounds < max_rounds:
-        state, done, ran = chunk_fn(state)
-        done, ran = jax.device_get((done, ran))
-        rounds += int(ran)
-        if bool(done):
-            break
-    wall = time.perf_counter() - t0
-
-    # a solo state is the lane-less case of the batched fetch: add a B=1
-    # axis and reuse the one extraction path (`_extract_result`)
-    host = _fetch_batch_state(jax.tree.map(lambda x: x[None], state))
-    return _extract_result(
-        host,
-        0,
-        spec,
-        g,
-        rounds,
-        wall,
         mode=mode,
         k=k,
-        num_workers=num_workers,
-        packed_status=packed_status,
+        max_rounds=max_rounds,
+        capacity=capacity,
+        compact_threshold=compact_threshold,
+    )
+    return _api.solve_spmd(
+        spec, g, cfg, _api.LEGACY_CACHE, initial_state=initial_state, mesh=mesh
     )
 
 
@@ -340,11 +317,18 @@ def solve_many(
     chunk_rounds: int = 16,
     mode: str = "bnb",
     k=None,
+    mesh=None,
     max_rounds: int = 200_000,
     capacity: Optional[int] = None,
     compact_threshold: float = 0.25,
 ) -> BatchResult:
-    """Solve B independent instances of ``problem`` on ONE solve plane.
+    """DEPRECATED shim over :class:`repro.api.SolverSession` — solve B
+    independent instances of ``problem`` on ONE solve plane.
+
+    Prefer ``SolverSession(...).solve_many(graphs)``.  This shim accepts the
+    full legacy knob superset (``mesh`` is accepted for solve/solve_many
+    parity but must stay ``None`` — the batched plane has no mesh path yet)
+    and returns the legacy ``BatchResult``.
 
     The paper's center is cheap so one coordinator can drive huge worker
     pools; this extends the same amortization across *instances*: the batch
@@ -371,129 +355,38 @@ def solve_many(
     could drop tasks its batched lane keeps.  Pass ``capacity`` to pin an
     exact size.
     """
-    spec = get_problem(problem)
-    graphs = list(graphs)
-    B = len(graphs)
-    if mode == "fpt":
-        ks = list(k) if hasattr(k, "__len__") else [k] * B
-        if len(ks) != B or any(kk is None for kk in ks):
-            raise ValueError("fpt mode needs one k (or one per instance)")
-    else:
-        ks = [None] * B
-    results: dict = {}
-    bucket_record = []
-    compactions = 0
-    wall_total = 0.0
-
-    for (W, _), idxs in sorted(_bucket_instances(graphs, by_n=(codec == "basic")).items()):
-        t0 = time.perf_counter()
-        bucket_graphs = [graphs[i] for i in idxs]
-        n_max = max(g.n for g in bucket_graphs)
-        bucket_record.append((W, n_max, list(idxs)))
-        cap = capacity or (4 * n_max + 8 * lanes)
-        # §4.3 codec payload at the bucket's padded size (validates the name)
-        pad = make_codec(codec, n_max, problem=spec).pad_words
-        initial_bests = [
-            problems_base.initial_bound(spec, g, mode, ks[i])
-            for i, g in zip(idxs, bucket_graphs)
-        ]
-
-        datas = problems_base.make_batch_data(spec, bucket_graphs, n_max, W)
-        state = _make_batch_state(
-            spec, bucket_graphs, num_workers, cap, W, initial_bests
-        )
-        fpt_bounds = (
-            jnp.asarray(np.array([spec.fpt_target(ks[i]) for i in idxs], np.int32))
-            if mode == "fpt"
-            else None
-        )
-
-        def make_chunk(data_b, bounds):
-            return build_batch_chunk_fn(
-                spec,
-                data_b,
-                steps_per_round=steps_per_round,
-                lanes=lanes,
-                policy_priority=policy_priority,
-                transfer_pad_words=pad,
-                packed_status=packed_status,
-                skip_empty_transfer=skip_empty_transfer,
-                transfer_impl=transfer_impl,
-                donate_k=donate_k,
-                chunk_rounds=chunk_rounds,
-                fpt_bounds=bounds,
-            )
-
-        chunk_fn = make_chunk(datas, fpt_bounds)
-        lanes_orig = np.array(idxs)  # lane -> original instance index
-        done = jnp.zeros((len(idxs),), bool)
-        rounds_done = np.zeros(B, np.int64)
-        total_ran = 0
-        while total_ran < max_rounds:
-            state, done, delta, ran = chunk_fn(state, done)
-            done_h, delta_h, ran_h = jax.device_get((done, delta, ran))
-            rounds_done[lanes_orig] += np.asarray(delta_h)
-            total_ran += int(ran_h)
-            done_h = np.asarray(done_h)
-            if done_h.all():
-                break
-            n_live = int((~done_h).sum())
-            n_lanes = len(lanes_orig)
-            target = _pow2_at_least(n_live)
-            if (
-                compact_threshold > 0
-                and n_live <= compact_threshold * n_lanes
-                and target < n_lanes
-            ):
-                # collect finished lanes now, keep live ones (plus frozen
-                # finished fillers up to the pow2 target so recompiles stay
-                # O(log B)), reslice every tensor, rebuild the executable.
-                host = _fetch_batch_state(state)
-                live = np.flatnonzero(~done_h)
-                fillers = np.flatnonzero(done_h)[: target - n_live]
-                for lane in np.flatnonzero(done_h):
-                    oi = int(lanes_orig[lane])
-                    if oi not in results and lane not in fillers:
-                        results[oi] = (lane, host, int(rounds_done[oi]))
-                sel = np.concatenate([live, fillers]).astype(np.int64)
-                state = jax.tree.map(lambda x: x[sel], state)
-                datas = problems_base.slice_instances(datas, sel)
-                if fpt_bounds is not None:
-                    fpt_bounds = fpt_bounds[sel]
-                done = jnp.asarray(done_h[sel])
-                lanes_orig = lanes_orig[sel]
-                chunk_fn = make_chunk(datas, fpt_bounds)
-                compactions += 1
-
-        host = _fetch_batch_state(state)
-        for lane, oi in enumerate(lanes_orig):
-            oi = int(oi)
-            if oi not in results:
-                results[oi] = (lane, host, int(rounds_done[oi]))
-        bucket_wall = time.perf_counter() - t0
-        wall_total += bucket_wall
-        per_wall = bucket_wall / max(len(idxs), 1)
-        for oi in idxs:
-            lane, host_i, rounds_i = results[oi]
-            results[oi] = _extract_result(
-                host_i,
-                lane,
-                spec,
-                graphs[oi],
-                rounds_i,
-                per_wall,
-                mode=mode,
-                k=ks[oi],
-                num_workers=num_workers,
-                packed_status=packed_status,
-            )
-
-    return BatchResult(
-        results=[results[i] for i in range(B)],
-        wall_s=wall_total,
-        buckets=bucket_record,
-        compactions=compactions,
+    warnings.warn(
+        "engine.solve_many is deprecated; use "
+        "repro.api.SolverSession(...).solve_many",
+        DeprecationWarning,
+        stacklevel=2,
     )
+    if mesh is not None:
+        raise ValueError(
+            "solve_many has no mesh path yet (vmap virtual workers only); "
+            "pass mesh=None"
+        )
+    from repro.api import backends as _api
+
+    spec = get_problem(problem)
+    cfg = _api.config_from_legacy(
+        policy_priority=policy_priority,
+        num_workers=num_workers,
+        steps_per_round=steps_per_round,
+        lanes=lanes,
+        codec=codec,
+        packed_status=packed_status,
+        skip_empty_transfer=skip_empty_transfer,
+        transfer_impl=transfer_impl,
+        donate_k=donate_k,
+        chunk_rounds=chunk_rounds,
+        mode=mode,
+        k=(tuple(k) if hasattr(k, "__len__") else k),
+        max_rounds=max_rounds,
+        capacity=capacity,
+        compact_threshold=compact_threshold,
+    )
+    return _api.solve_many_spmd(spec, graphs, cfg, _api.LEGACY_CACHE)
 
 
 # -- elasticity -----------------------------------------------------------------

@@ -28,8 +28,9 @@ import numpy as np
 from repro.core.center import CenterState, Status
 from repro.core.encoding import Task, make_codec
 from repro.core.task_tree import TaskTree
-from repro.graphs.bitgraph import BitGraph, mask_full, popcount_rows
-from repro.problems.sequential import branch_once, lower_bound
+from repro.graphs.bitgraph import BitGraph, mask_full
+from repro.problems import base as problems_base
+from repro.problems.registry import DEFAULT_PROBLEM, get_problem
 
 CENTER = 0
 INT_BYTES = 4  # "each message is small as it only requires sending a single integer"
@@ -102,19 +103,30 @@ class _Network:
 
 
 class _Worker:
-    """One virtual worker process (Alg. 4 + the DFS exploration loop)."""
+    """One virtual worker process (Alg. 4 + the DFS exploration loop).
 
-    def __init__(self, wid: int, g: BitGraph, net: _Network, stats: SimStats, mode, k):
+    Branching and bounding are resolved through the problem's
+    :class:`~repro.problems.base.BranchingProblem` host callables
+    (``branch_once_host`` / ``host_task_bound`` / ``host_terminal_value``),
+    so the simulator runs any registry problem with host plumbing — all
+    values are in the plugin's INTERNAL minimization sense.  ``g`` is the
+    problem's host VIEW (e.g. the complement graph for MIS)."""
+
+    def __init__(
+        self, wid: int, g: BitGraph, net: _Network, stats: SimStats, mode, k,
+        problem: problems_base.BranchingProblem,
+    ):
         self.wid = wid
         self.g = g
         self.net = net
         self.stats = stats
         self.mode = mode
         self.k = k
+        self.problem = problem
         self.tree = TaskTree()
         # DFS stack entries: [task, children(list of Task), next_child_idx]
         self.stack: list[list] = []
-        self.local_best: int = g.n + 1 if mode == "bnb" else (k + 1)
+        self.local_best: int = problems_base.initial_bound(problem, g, mode, k)
         self.local_best_sol: Optional[np.ndarray] = None
         self.global_best_seen: int = self.local_best
         self.waiting: list[int] = []  # processes center told us to feed
@@ -168,18 +180,18 @@ class _Worker:
         if children is None:
             # first visit: bound check, then branch (Alg. 2 / Alg. 9)
             self.stats.nodes_expanded += 1
-            sol_size = int(popcount_rows(task.sol_mask))
-            if sol_size + lower_bound(self.g, task.mask) >= self.bound():
+            spec = self.problem
+            if spec.host_task_bound(self.g, task.mask, task.sol_mask) >= self.bound():
                 self._finish_node(task)
                 return
-            kids, terminal = branch_once(self.g, task.mask, task.sol_mask)
+            kids, terminal = spec.branch_once_host(self.g, task.mask, task.sol_mask)
             if terminal is not None:
-                tsize = int(popcount_rows(terminal[1]))
-                if tsize < self.bound():
-                    self.local_best = tsize
+                tval = int(spec.host_terminal_value(self.g, terminal[0], terminal[1]))
+                if tval < self.bound():
+                    self.local_best = tval
                     self.local_best_sol = terminal[1]
                     # paper: inform center when a better value is found
-                    self.net.send(self.wid, CENTER, "bestval_update", tsize, now)
+                    self.net.send(self.wid, CENTER, "bestval_update", tval, now)
                 self._finish_node(task)
                 return
             child_tasks = [
@@ -245,14 +257,23 @@ def run_protocol_sim(
     send_metadata: bool = False,
     max_ticks: int = 2_000_000,
     seed: int = 0,
+    problem=DEFAULT_PROBLEM,
 ) -> SimResult:
-    """Run the full asynchronous protocol until center-verified termination."""
+    """Run the full asynchronous protocol until center-verified termination.
+
+    ``problem`` is any registry problem (or spec) with host plumbing — the
+    workers explore its host view with its host bounds, so
+    ``problem="max_clique"`` runs the same Algorithms 3-6 protocol on the
+    clique brancher."""
+    spec = problems_base.require_host_bounds(get_problem(problem))
+    view = spec.host_view(g)
     stats = SimStats()
-    codec = make_codec(codec_name, g.n)
+    codec = make_codec(codec_name, view.n, problem=spec)
     net = _Network(latency=latency, stats=stats, codec=codec)
     center = CenterState(num_workers=num_workers, policy=policy, seed=seed)
     workers = {
-        i: _Worker(i, g, net, stats, mode, k) for i in range(1, num_workers + 1)
+        i: _Worker(i, view, net, stats, mode, k, spec)
+        for i in range(1, num_workers + 1)
     }
 
     # Startup (§3.5): the seed goes to worker 1 (Fig. 1) and the center
@@ -262,7 +283,9 @@ def run_protocol_sim(
     # Alg. 7 assigner -- no startup 'available' storm, no failed requests.
     from repro.core.waiting_list import build_waiting_lists
 
-    seed_task = Task(mask=mask_full(g.n), sol_mask=np.zeros(g.W, np.uint32), depth=0)
+    seed_task = Task(
+        mask=mask_full(view.n), sol_mask=np.zeros(view.W, np.uint32), depth=0
+    )
     workers[1]._start_task(seed_task)
     wlists = build_waiting_lists(max_b=2, p=num_workers)
     for wid, lst in wlists.items():
@@ -314,8 +337,13 @@ def run_protocol_sim(
         else:
             termination_probe = None
 
-        # ---- fpt early stop: a solution of size <= k ends the exploration ----
-        if mode == "fpt" and center.best_val is not None and center.best_val <= k:
+        # ---- fpt early stop: reaching the internal decision target ends the
+        # exploration (<= k for minimization, >= k for negated maximization) --
+        if (
+            mode == "fpt"
+            and center.best_val is not None
+            and center.best_val <= spec.fpt_target(k)
+        ):
             break
 
         # ---- workers ----
@@ -332,14 +360,20 @@ def run_protocol_sim(
 
     stats.ticks = now
     # collect the best solution: center knows the holder (§3.1) and fetches it
-    # only once, after exploration finishes.
-    best_size = g.n + 1
+    # only once, after exploration finishes.  "found nothing acceptable" is
+    # exactly "the internal best never improved on the seed bound" — the same
+    # objective-adapter contract as the SPMD engine's result extraction.
+    initial = problems_base.initial_bound(spec, view, mode, k)
+    internal_best = initial
     best_sol = None
     for wk in workers.values():
-        if wk.local_best < best_size:
-            best_size = wk.local_best
+        if wk.local_best < internal_best:
+            internal_best = wk.local_best
             best_sol = wk.local_best_sol
-    if mode == "fpt":
-        found = best_size <= (k if k is not None else -1)
-        return SimResult(best_size if found else -1, best_sol if found else None, stats, now)
+    found = internal_best < initial
+    best_size = int(spec.external_value(internal_best))
+    if not found:
+        best_sol = None
+        if mode == "fpt":
+            best_size = -1
     return SimResult(best_size, best_sol, stats, now)

@@ -473,6 +473,172 @@ def build_superstep_fn(
     )
 
 
+# -- parametric compiled planes ------------------------------------------------
+#
+# The builders below close over NOTHING instance-specific: `ProblemData` (and
+# the FPT bound) are call-time arguments of the returned jitted function, so
+# ONE executable serves every same-shape instance — the session-level
+# compiled-plane cache (repro.api) keys these functions by configuration and
+# lets jax's own trace cache specialize per (n, W, capacity) shape.  A warm
+# repeat solve therefore re-traces nothing.
+#
+# `PLANE_TRACES` counts actual traces: it is bumped by a host side effect
+# inside the traced body, which only runs when jax (re)traces — tests and the
+# session's cache_stats() use it as the ground-truth compile counter.
+
+PLANE_TRACES = 0
+
+
+def _count_plane_trace() -> None:
+    global PLANE_TRACES
+    PLANE_TRACES += 1
+
+
+def build_plane_fn(
+    problem: BranchingProblem,
+    *,
+    steps_per_round: int,
+    lanes: int,
+    policy_priority: bool = True,
+    transfer_pad_words: int = 0,
+    packed_status: bool = True,
+    skip_empty_transfer: bool = True,
+    transfer_impl: str = "sparse",
+    donate_k: int = 1,
+    chunk_rounds: int = 16,
+    use_fpt: bool = False,
+    axis_name: str = "workers",
+):
+    """Parametric solo chunk runner (vmap virtual workers).
+
+    Returns a jitted ``(data, state) -> (state, done, ran)`` — or, with
+    ``use_fpt``, ``(data, state, fpt_bound) -> ...`` where ``fpt_bound`` is
+    the () int32 INTERNAL decision target.  Semantics are identical to
+    :func:`build_chunk_fn` (mesh=None); the difference is purely that the
+    instance tensors are arguments, so the function is reusable across
+    same-shape instances without re-tracing.
+    """
+    if chunk_rounds < 1:
+        raise ValueError(f"chunk_rounds must be >= 1, got {chunk_rounds}")
+    step = functools.partial(
+        superstep,
+        problem,
+        axis_name=axis_name,
+        steps_per_round=steps_per_round,
+        lanes=lanes,
+        policy_priority=policy_priority,
+        transfer_pad_words=transfer_pad_words,
+        packed_status=packed_status,
+        skip_empty_transfer=skip_empty_transfer,
+        transfer_impl=transfer_impl,
+        donate_k=donate_k,
+    )
+
+    def cond(carry):
+        _, done, i = carry
+        return jnp.logical_not(done) & (i < chunk_rounds)
+
+    def _run(data, state, fpt_bound):
+        _count_plane_trace()
+        vstep = jax.vmap(lambda s: step(data, s), axis_name=axis_name)
+
+        def body(carry):
+            state, _, i = carry
+            state, done = vstep(state)
+            done = done.all()
+            if use_fpt:
+                done = done | (state.best_val.min() <= fpt_bound)
+            return state, done, i + 1
+
+        return jax.lax.while_loop(
+            cond, body, (state, jnp.bool_(False), jnp.int32(0))
+        )
+
+    if use_fpt:
+        return jax.jit(_run)
+    return jax.jit(lambda data, state: _run(data, state, None))
+
+
+def build_batch_plane_fn(
+    problem: BranchingProblem,
+    *,
+    steps_per_round: int,
+    lanes: int,
+    policy_priority: bool = True,
+    transfer_pad_words: int = 0,
+    packed_status: bool = True,
+    skip_empty_transfer: bool = True,
+    transfer_impl: str = "sparse",
+    donate_k: int = 1,
+    chunk_rounds: int = 16,
+    use_fpt: bool = False,
+    axis_name: str = "workers",
+):
+    """Parametric batch chunk runner over (B, P, ...) stacked state.
+
+    Returns a jitted ``(datas, state, done) -> (state, done, rounds_delta,
+    ran)`` — with ``use_fpt``, an extra trailing ``fpt_bounds`` (B,) int32
+    argument.  Same contract as :func:`build_batch_chunk_fn`, but the batched
+    instance tensors are call-time arguments: host-side compaction can
+    reslice and keep calling the SAME function, and a later batch with
+    previously-seen shapes reuses the executable outright.
+    """
+    if chunk_rounds < 1:
+        raise ValueError(f"chunk_rounds must be >= 1, got {chunk_rounds}")
+    step = functools.partial(
+        superstep,
+        problem,
+        axis_name=axis_name,
+        steps_per_round=steps_per_round,
+        lanes=lanes,
+        policy_priority=policy_priority,
+        transfer_pad_words=transfer_pad_words,
+        packed_status=packed_status,
+        skip_empty_transfer=skip_empty_transfer,
+        transfer_impl=transfer_impl,
+        donate_k=donate_k,
+    )
+
+    def one_instance(data, state):
+        state, done = jax.vmap(
+            lambda s: step(data, s), axis_name=axis_name
+        )(state)
+        return state, done.all()
+
+    bstep = jax.vmap(one_instance, in_axes=(DATA_IN_AXES, 0))
+
+    def cond(carry):
+        _, done, _, i = carry
+        return jnp.logical_not(done.all()) & (i < chunk_rounds)
+
+    def _run(datas, state, done, fpt_bounds):
+        _count_plane_trace()
+
+        def body(carry):
+            state, done, rounds_delta, i = carry
+            new_state, step_done = bstep(datas, state)
+            # freeze finished lanes (see build_batch_chunk_fn)
+            state = jax.tree.map(
+                lambda old, new: jnp.where(_expand_like(done, new), old, new),
+                state,
+                new_state,
+            )
+            new_done = done | step_done
+            if use_fpt:
+                new_done = new_done | (state.best_val[:, 0] <= fpt_bounds)
+            rounds_delta = rounds_delta + jnp.where(done, 0, 1).astype(jnp.int32)
+            return state, new_done, rounds_delta, i + 1
+
+        B = done.shape[0]
+        return jax.lax.while_loop(
+            cond, body, (state, done, jnp.zeros((B,), jnp.int32), jnp.int32(0))
+        )
+
+    if use_fpt:
+        return jax.jit(_run)
+    return jax.jit(lambda datas, state, done: _run(datas, state, done, None))
+
+
 # -- the instance axis ---------------------------------------------------------
 #
 # `solve_many` stacks B independent instances in front of the worker axis:
@@ -576,11 +742,8 @@ def build_batch_chunk_fn(
     finished majority through extra host syncs — and the host can compact
     the batch between chunks (see ``engine.solve_many``).
     """
-    if chunk_rounds < 1:
-        raise ValueError(f"chunk_rounds must be >= 1, got {chunk_rounds}")
-    sstep = build_batch_superstep_fn(
+    plane = build_batch_plane_fn(
         problem,
-        datas,
         steps_per_round=steps_per_round,
         lanes=lanes,
         policy_priority=policy_priority,
@@ -589,43 +752,14 @@ def build_batch_chunk_fn(
         skip_empty_transfer=skip_empty_transfer,
         transfer_impl=transfer_impl,
         donate_k=donate_k,
+        chunk_rounds=chunk_rounds,
+        use_fpt=(fpt_bounds is not None),
         axis_name=axis_name,
     )
-
-    def cond(carry):
-        _, done, _, i = carry
-        return jnp.logical_not(done.all()) & (i < chunk_rounds)
-
-    def body(carry):
-        state, done, rounds_delta, i = carry
-        new_state, step_done = sstep(state)
-        # freeze finished lanes: their superstep is a no-op by construction
-        # (empty frontier -> nothing pops, no donor match), but the select
-        # also pins the round/stat counters so per-instance results stay
-        # bit-identical to a solo `engine.solve` run.
-        state = jax.tree.map(
-            lambda old, new: jnp.where(_expand_like(done, new), old, new),
-            state,
-            new_state,
-        )
-        new_done = done | step_done
-        if fpt_bounds is not None:
-            # best_val is the global (per-instance) min after the pmin phase,
-            # replicated across workers: lane 0's view is the instance truth.
-            new_done = new_done | (state.best_val[:, 0] <= fpt_bounds)
-        rounds_delta = rounds_delta + jnp.where(done, 0, 1).astype(jnp.int32)
-        return state, new_done, rounds_delta, i + 1
-
-    def run(state, done):
-        B = done.shape[0]
-        state, done, rounds_delta, ran = jax.lax.while_loop(
-            cond,
-            body,
-            (state, done, jnp.zeros((B,), jnp.int32), jnp.int32(0)),
-        )
-        return state, done, rounds_delta, ran
-
-    return jax.jit(run)
+    if fpt_bounds is not None:
+        bounds = jnp.asarray(fpt_bounds, jnp.int32)
+        return lambda state, done: plane(datas, state, done, bounds)
+    return lambda state, done: plane(datas, state, done)
 
 
 def build_chunk_fn(
@@ -664,6 +798,26 @@ def build_chunk_fn(
         # 0 would return (state, done=False, ran=0) forever: the caller's
         # progress counter never advances and its solve loop cannot exit
         raise ValueError(f"chunk_rounds must be >= 1, got {chunk_rounds}")
+    if mesh is None:
+        plane = build_plane_fn(
+            problem,
+            steps_per_round=steps_per_round,
+            lanes=lanes,
+            policy_priority=policy_priority,
+            transfer_pad_words=transfer_pad_words,
+            packed_status=packed_status,
+            skip_empty_transfer=skip_empty_transfer,
+            transfer_impl=transfer_impl,
+            donate_k=donate_k,
+            chunk_rounds=chunk_rounds,
+            use_fpt=(fpt_bound is not None),
+            axis_name=axis_name,
+        )
+        if fpt_bound is not None:
+            bound = jnp.int32(fpt_bound)
+            return lambda state: plane(data, state, bound)
+        return lambda state: plane(data, state)
+
     step = functools.partial(
         superstep,
         problem,
@@ -682,24 +836,6 @@ def build_chunk_fn(
     def cond(carry):
         _, done, i = carry
         return jnp.logical_not(done) & (i < chunk_rounds)
-
-    if mesh is None:
-        vstep = jax.vmap(step, axis_name=axis_name)
-
-        def body(carry):
-            state, _, i = carry
-            state, done = vstep(state)
-            done = done.all()
-            if fpt_bound is not None:
-                done = done | (state.best_val.min() <= fpt_bound)
-            return state, done, i + 1
-
-        def run(state):
-            return jax.lax.while_loop(
-                cond, body, (state, jnp.bool_(False), jnp.int32(0))
-            )
-
-        return jax.jit(run)
 
     from jax.sharding import PartitionSpec as P
 

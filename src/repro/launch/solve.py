@@ -1,40 +1,46 @@
-"""Branching-problem solver driver — any registry problem, four engines.
+"""Branching-problem solver driver — any registry problem, any backend,
+one config.
 
   --problem NAME     which branching problem (vertex_cover, max_clique, mis;
                      see repro.problems.registry)
-  --engine spmd      the TPU-adapted superstep engine (vmap of P virtual
-                     workers on CPU; one worker per device with --use-mesh)
-  --engine protocol  the faithful asynchronous MPI-protocol simulator
-                     (vertex-cover only)
-  --engine central   the fully-centralized baseline (Abu-Khzam 2006;
-                     vertex-cover only)
-  --engine seq       the problem's sequential reference
+  --engine spmd         the TPU-adapted superstep engine (vmap of P virtual
+                        workers on CPU; one worker per device with --use-mesh)
+  --engine protocol_sim the faithful asynchronous MPI-protocol simulator
+                        (alias: protocol)
+  --engine centralized  the fully-centralized baseline (Abu-Khzam 2006;
+                        alias: central)
+  --engine sequential   the problem's sequential reference (alias: seq)
 
-Multi-instance mode (the batched solve plane, `engine.solve_many`): pass
-several DIMACS files and/or `--batch B` to pack B instances onto one plane —
-one compiled executable and one host sync per chunk for the whole batch.
+All engines run behind one :class:`repro.api.SolverSession`, so every
+combination of backend x problem with host plumbing works (e.g.
+``--engine protocol_sim --problem max_clique``) and results arrive in the
+unified :class:`repro.api.SolveResult` schema.
+
+Config: every tuning knob is a :class:`repro.api.SolveConfig` field.
+``--config cfg.json`` loads a base config, explicit CLI flags override it,
+and ``--dump-config out.json`` writes the EFFECTIVE config next to the
+results (``-`` prints it) — the solve is reproducible from that file.
+
+Multi-instance mode (the batched solve plane): pass several DIMACS files
+and/or ``--batch B`` to pack B instances onto one plane — one compiled
+executable and one host sync per chunk for the whole batch.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.solve --graph gnp --n 60 --p 0.1 \
       --engine spmd --workers 8
   PYTHONPATH=src python -m repro.launch.solve --graph gnp --n 40 \
-      --problem max_clique --workers 8
-  PYTHONPATH=src python -m repro.launch.solve --graph phat --n 120 \
-      --density 0.4 --engine protocol --workers 16 --codec basic
-  PYTHONPATH=src python -m repro.launch.solve --graph dimacs \
-      --files a.col b.col c.col --workers 8
+      --problem max_clique --engine protocol_sim --workers 8
   PYTHONPATH=src python -m repro.launch.solve --graph gnp --n 40 --batch 16
+  PYTHONPATH=src python -m repro.launch.solve --config cfg.json --workers 4 \
+      --dump-config effective.json
 """
 
 from __future__ import annotations
 
 import argparse
 import sys
-import time
 
-from repro.core.encoding import make_codec
 from repro.graphs.generators import erdos_renyi, p_hat_like, parse_dimacs
-from repro.problems.registry import get_problem
 
 
 def build_graph(args, seed=None):
@@ -69,7 +75,39 @@ def build_graphs(args):
     return graphs, labels
 
 
+# CLI flag dest -> SolveConfig field.  These flags default to SUPPRESS so
+# only EXPLICIT flags override a --config file (load -> override -> dump).
+CONFIG_FLAGS = {
+    "workers": "num_workers",
+    "codec": "codec",
+    "policy": "policy",
+    "steps_per_round": "steps_per_round",
+    "lanes": "lanes",
+    "transfer": "transfer_impl",
+    "donate_k": "donate_k",
+    "chunk_rounds": "chunk_rounds",
+    "use_mesh": "use_mesh",
+    "mode": "mode",
+    "k": "k",
+    "latency": "latency",
+}
+
+
+def effective_config(args):
+    """--config base (or defaults), overridden by explicit CLI flags."""
+    from repro.api import SolveConfig
+
+    base = SolveConfig.load(args.config) if args.config else SolveConfig()
+    provided = {
+        CONFIG_FLAGS[dest]: value
+        for dest, value in vars(args).items()
+        if dest in CONFIG_FLAGS
+    }
+    return base.replace(**provided) if provided else base
+
+
 def main():
+    S = argparse.SUPPRESS
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", default="gnp", choices=["gnp", "phat", "dimacs"])
     ap.add_argument("--n", type=int, default=60)
@@ -84,155 +122,104 @@ def main():
                          "the batched engine)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
-        "--engine", default="spmd", choices=["spmd", "protocol", "central", "seq"]
+        "--engine", default="spmd",
+        help="backend: spmd, protocol_sim (protocol), centralized "
+             "(central), sequential (seq)",
     )
     ap.add_argument("--problem", default="vertex_cover",
                     help="branching problem from the registry "
                          "(vertex_cover, max_clique, mis, ...)")
-    ap.add_argument("--workers", type=int, default=8)
-    ap.add_argument("--codec", default="optimized",
+    ap.add_argument("--config", default=None,
+                    help="JSON SolveConfig to start from; explicit CLI "
+                         "flags override it")
+    ap.add_argument("--dump-config", default=None, metavar="PATH",
+                    help="write the EFFECTIVE config as JSON ('-' prints) "
+                         "and still run the solve")
+    # -- SolveConfig knobs (SUPPRESS default = "not explicitly provided") ----
+    ap.add_argument("--workers", type=int, default=S)
+    ap.add_argument("--codec", default=S,
                     help="task codec: optimized (n-bit masks) or basic "
                          "(adjacency payload, §4.3)")
-    ap.add_argument("--policy", default="priority", choices=["priority", "random"])
-    ap.add_argument("--steps-per-round", type=int, default=32)
-    ap.add_argument("--lanes", type=int, default=1)
-    ap.add_argument("--transfer", default="sparse", choices=["sparse", "gather"],
+    ap.add_argument("--policy", default=S, choices=["priority", "random"])
+    ap.add_argument("--steps-per-round", type=int, default=S)
+    ap.add_argument("--lanes", type=int, default=S)
+    ap.add_argument("--transfer", default=S, choices=["sparse", "gather"],
                     help="data-plane impl (sparse=masked psum, gather=all-gather)")
-    ap.add_argument("--donate-k", type=int, default=1,
+    ap.add_argument("--donate-k", type=int, default=S,
                     help="max tasks a matched donor ships per round")
-    ap.add_argument("--chunk-rounds", type=int, default=16,
+    ap.add_argument("--chunk-rounds", type=int, default=S,
                     help="supersteps per host sync (device-resident loop)")
-    ap.add_argument("--use-mesh", action="store_true",
+    ap.add_argument("--use-mesh", action="store_true", default=S,
                     help="one worker per jax device (shard_map)")
-    ap.add_argument("--mode", default="bnb", choices=["bnb", "fpt"])
-    ap.add_argument("--k", type=int, default=None)
+    ap.add_argument("--mode", default=S, choices=["bnb", "fpt"])
+    ap.add_argument("--k", type=int, default=S)
+    ap.add_argument("--latency", type=int, default=S,
+                    help="simulator message latency in ticks")
     args = ap.parse_args()
 
-    # validate names through the registries up front: a typo'd --problem or
-    # --codec dies with the list of known names, not a deep KeyError (the
-    # same fix pattern as the benchmarks.run name validation)
+    # one validation pass: config knobs, problem and backend names all fail
+    # with the list of valid values, not a deep KeyError
+    from repro.api import SolverSession, get_backend
+    from repro.problems.registry import get_problem
+
     try:
+        cfg = effective_config(args)
         spec = get_problem(args.problem)
-        make_codec(args.codec, 1)
+        backend = get_backend(args.engine)
     except ValueError as e:
         raise SystemExit(f"error: {e}")
-    if args.engine in ("protocol", "central") and spec.name != "vertex_cover":
-        raise SystemExit(
-            f"--engine {args.engine} simulates the paper's vertex-cover "
-            f"protocol only; use --engine spmd or seq for {spec.name}"
-        )
+
+    if args.dump_config:
+        if args.dump_config == "-":
+            sys.stdout.write(cfg.to_json())
+        else:
+            cfg.save(args.dump_config)
+            print(f"[solve] effective config -> {args.dump_config}")
+
+    session = SolverSession(problem=spec, backend=backend, config=cfg)
 
     batch_graphs, batch_labels = build_graphs(args)
     if batch_graphs:
-        if args.engine != "spmd":
-            raise SystemExit("multi-instance mode is spmd-only")
-        if args.use_mesh:
+        if cfg.use_mesh:
             raise SystemExit(
                 "multi-instance mode has no mesh path yet (vmap virtual "
                 "workers only) — drop --use-mesh"
             )
-        from repro.core.engine import solve_many
-
         print(f"[solve] batch of {len(batch_graphs)} instances "
-              f"[{spec.name}], workers/instance={args.workers}")
-        res = solve_many(
-            batch_graphs,
-            num_workers=args.workers,
-            problem=spec,
-            steps_per_round=args.steps_per_round,
-            lanes=args.lanes,
-            policy_priority=(args.policy == "priority"),
-            codec=args.codec,
-            transfer_impl=args.transfer,
-            donate_k=args.donate_k,
-            chunk_rounds=args.chunk_rounds,
-            mode=args.mode,
-            k=args.k,
-        )
+              f"[{spec.name}] on {backend.name}, "
+              f"workers/instance={cfg.num_workers}")
+        res = session.solve_many(batch_graphs)
         for label, r in zip(batch_labels, res.results):
             print(f"[solve]   {label}: best={r.best_size} rounds={r.rounds} "
                   f"nodes={r.nodes_expanded} transfers={r.tasks_transferred}")
-        n_buckets = len(res.buckets)
         print(f"[solve] batch done: {len(batch_graphs)} instances in "
               f"{res.wall_s:.2f}s "
               f"({len(batch_graphs) / max(res.wall_s, 1e-9):.2f} inst/s), "
-              f"{n_buckets} bucket(s), {res.compactions} compaction(s)")
+              f"{len(res.buckets)} bucket(s), {res.compactions} "
+              f"compaction(s); cache: {session.cache_stats()}")
         return
 
     g = build_graph(args)
-    print(f"[solve] graph n={g.n} m={g.num_edges} engine={args.engine} "
+    print(f"[solve] graph n={g.n} m={g.num_edges} engine={backend.name} "
           f"problem={spec.name}")
-    t0 = time.perf_counter()
-
-    if args.engine == "seq":
-        best, sol, stats = spec.sequential(g, mode=args.mode, k=args.k)
-        dt = time.perf_counter() - t0
-        print(f"[solve] best={best} nodes={stats.nodes} {dt:.2f}s")
-        return
-
-    if args.engine == "protocol":
-        from repro.core.protocol_sim import run_protocol_sim
-
-        res = run_protocol_sim(
-            g, num_workers=args.workers, policy=args.policy,
-            codec_name=args.codec, mode=args.mode, k=args.k,
-        )
-        dt = time.perf_counter() - t0
-        s = res.stats
-        print(
-            f"[solve] mvc={res.best_size} ticks={res.ticks} "
-            f"nodes={s.nodes_expanded} transfers={s.tasks_transferred} "
-            f"failed_requests={s.failed_requests} "
-            f"bytes={s.total_bytes} (center {s.center_bytes}) {dt:.2f}s"
-        )
-        return
-
-    if args.engine == "central":
-        from repro.core.centralized import run_centralized_sim
-
-        res = run_centralized_sim(
-            g, num_workers=args.workers, codec_name=args.codec
-        )
-        dt = time.perf_counter() - t0
-        s = res.stats
-        print(
-            f"[solve] mvc={res.best_size} ticks={res.ticks} "
-            f"nodes={s.nodes_expanded} transfers={s.tasks_transferred} "
-            f"bytes={s.total_bytes} {dt:.2f}s"
-        )
-        return
-
-    from repro.core.engine import solve
-
-    mesh = None
-    if args.use_mesh:
-        from repro.launch.mesh import make_solver_mesh
-
-        mesh = make_solver_mesh(args.workers)
-    res = solve(
-        g,
-        num_workers=args.workers,
-        problem=spec,
-        steps_per_round=args.steps_per_round,
-        lanes=args.lanes,
-        policy_priority=(args.policy == "priority"),
-        codec=args.codec,
-        transfer_impl=args.transfer,
-        donate_k=args.donate_k,
-        chunk_rounds=args.chunk_rounds,
-        mode=args.mode,
-        k=args.k,
-        mesh=mesh,
-    )
-    print(
-        f"[solve] best={res.best_size} rounds={res.rounds} "
-        f"nodes={res.nodes_expanded} transfers={res.tasks_transferred} "
-        f"overflow={res.overflow} wall={res.wall_s:.2f}s "
-        f"control_B/round={res.control_bytes_per_round} "
-        f"transfer_B/round={res.transfer_bytes_per_round:.1f} "
-        f"(total {res.transfer_bytes_total}B over "
-        f"{res.transfer_rounds} transfer rounds, {args.transfer})"
-    )
+    r = session.solve(g)
+    line = (f"[solve] best={r.best_size} rounds={r.rounds} "
+            f"nodes={r.nodes_expanded} transfers={r.tasks_transferred} "
+            f"wall={r.wall_s:.2f}s")
+    s = r.stats
+    if backend.name == "spmd":
+        line += (f" overflow={s['overflow']} "
+                 f"control_B/round={s['control_bytes_per_round']} "
+                 f"transfer_B/round={s['transfer_bytes_per_round']:.1f} "
+                 f"(total {s['transfer_bytes_total']}B over "
+                 f"{s['transfer_rounds']} transfer rounds, "
+                 f"{cfg.transfer_impl})")
+    elif backend.name in ("protocol_sim", "centralized"):
+        line += (f" bytes={s['total_bytes']}"
+                 + (f" (center {s['center_bytes']})"
+                    f" failed_requests={s['failed_requests']}"
+                    if backend.name == "protocol_sim" else ""))
+    print(line)
 
 
 if __name__ == "__main__":

@@ -180,8 +180,38 @@ class BranchingProblem:
     sequential: Optional[Callable] = None  # ground-truth reference solver
     verify: Optional[Callable] = None  # (g, sol_mask) -> bool
 
+    # host-side twins of task_bound/child_bound plus the terminal objective,
+    # all in the INTERNAL (minimization) sense over (view, mask, sol_mask) —
+    # these are what make a problem runnable on the discrete-event simulator
+    # backends (protocol_sim / centralized), which explore on the host.
+    host_task_bound: Optional[Callable] = None  # admissible pre-expansion bound
+    host_child_bound: Optional[Callable] = None  # cheap bound at task birth
+    host_terminal_value: Optional[Callable] = None  # internal value of a leaf
+
     # codec record layout (see repro.core.encoding)
     record_fields: tuple = RECORD_FIELDS
+
+
+def require_host_bounds(problem: BranchingProblem) -> BranchingProblem:
+    """Assert a problem carries the host-side exploration callables the
+    simulator backends need; raises a ``ValueError`` naming what's missing
+    (the same fail-helpfully pattern as the registries)."""
+    missing = [
+        field
+        for field in (
+            "branch_once_host",
+            "host_task_bound",
+            "host_child_bound",
+            "host_terminal_value",
+        )
+        if getattr(problem, field) is None
+    ]
+    if missing:
+        raise ValueError(
+            f"problem {problem.name!r} cannot run on a host simulator "
+            f"backend: missing {', '.join(missing)} (see BranchingProblem)"
+        )
+    return problem
 
 
 def initial_bound(problem: BranchingProblem, g, mode: str, k) -> int:

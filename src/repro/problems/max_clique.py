@@ -50,6 +50,19 @@ def bound(data: ProblemData, mask, sol) -> jnp.ndarray:
     return -(popcount(sol) + popcount(mask))
 
 
+def host_bound(g, mask, sol_mask) -> int:
+    """Host twin of :func:`bound`: -(|R| + |P|) over packed host bitsets."""
+    from repro.graphs.bitgraph import popcount_rows
+
+    return -int(popcount_rows(sol_mask) + popcount_rows(mask))
+
+
+def host_terminal_value(g, mask, sol_mask) -> int:
+    from repro.graphs.bitgraph import popcount_rows
+
+    return -int(popcount_rows(sol_mask))
+
+
 SPEC = BranchingProblem(
     name="max_clique",
     objective="maximize |clique|",
@@ -62,4 +75,7 @@ SPEC = BranchingProblem(
     branch_once_host=sequential.branch_once_clique,
     sequential=sequential.solve_sequential_max_clique,
     verify=sequential.verify_clique,
+    host_task_bound=host_bound,
+    host_child_bound=host_bound,
+    host_terminal_value=host_terminal_value,
 )

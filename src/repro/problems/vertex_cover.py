@@ -184,6 +184,19 @@ def verify_cover(adj, sol_mask, n: int) -> jnp.ndarray:
     return (jnp.where(inc, 0, cnt).sum() == 0)
 
 
+def _host_task_bound(g, mask, sol_mask) -> int:
+    """|S| + ceil(E/maxdeg) — the host twin of :func:`task_bound`."""
+    from repro.graphs.bitgraph import popcount_rows
+
+    return int(popcount_rows(sol_mask)) + sequential.lower_bound(g, mask)
+
+
+def _host_child_bound(g, mask, sol_mask) -> int:
+    from repro.graphs.bitgraph import popcount_rows
+
+    return int(popcount_rows(sol_mask))
+
+
 SPEC = BranchingProblem(
     name="vertex_cover",
     objective="minimize |cover|",
@@ -194,4 +207,7 @@ SPEC = BranchingProblem(
     branch_once_host=sequential.branch_once,
     sequential=sequential.solve_sequential,
     verify=sequential.verify_cover,
+    host_task_bound=_host_task_bound,
+    host_child_bound=_host_child_bound,
+    host_terminal_value=_host_child_bound,  # a leaf's cover size is |S|
 )

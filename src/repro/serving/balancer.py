@@ -112,7 +112,7 @@ def rebalance(state: BalancerState) -> int:
 @dataclasses.dataclass
 class SolveBatcher:
     """Admit a stream of branching-problem solve requests into fixed-size
-    ``engine.solve_many`` batches.
+    batched-solve-plane (``SolverSession.solve_many``) batches.
 
     This is the serving front of the batched solve plane: a request's
     "replica" is one of the B lanes of a solve batch, so the continuous-
@@ -199,15 +199,39 @@ def solve_stream(
 
     ``problem`` is one registry name for the whole stream, or a per-instance
     sequence — mixed streams split into (problem, W) planes and each plane is
-    solved under its own problem.  ``solver`` defaults to
-    :func:`repro.core.engine.solve_many` (injectable so the admission logic
-    stays testable without the jax engine); it receives ``problem=`` per
-    batch."""
+    solved under its own problem.  With no ``solver``, the stream delegates
+    to :func:`repro.api.solve_stream_session`: per-problem
+    :class:`~repro.api.SolverSession` instances sharing ONE compiled-plane
+    cache, so a long mixed stream replaying the same (problem, W, B) planes
+    pays each trace/compile once instead of once per batch.  ``solve_kw``
+    maps onto :class:`repro.api.SolveConfig` knobs (the legacy
+    ``policy_priority`` bool is still accepted).  An injected ``solver``
+    keeps the admission logic testable without the jax engine; it receives
+    ``problem=`` per batch plus ``solve_kw`` verbatim.
+    """
     if solver is None:
-        from repro.core.engine import solve_many as solver_fn
+        from repro.api import solve_stream_session
+        from repro.api.backends import config_from_legacy
 
-        def solver(gs, problem="vertex_cover", **kw):
-            return solver_fn(gs, problem=problem, **kw).results
+        try:
+            cfg = config_from_legacy(**solve_kw)
+        except TypeError:
+            import dataclasses
+
+            from repro.api import SolveConfig
+
+            known = sorted(
+                {f.name for f in dataclasses.fields(SolveConfig)}
+                | {"policy_priority"}
+            )
+            unknown = sorted(set(solve_kw) - set(known))
+            raise ValueError(
+                f"unknown solve_stream option(s): {', '.join(unknown)}; "
+                f"known: {', '.join(known)}"
+            )
+        return solve_stream_session(
+            graphs, batch_size, problem=problem, config=cfg
+        )
 
     graphs = list(graphs)
     probs = (

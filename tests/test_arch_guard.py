@@ -62,3 +62,44 @@ def test_core_resolves_problems_through_the_registry():
     assert engine.DEFAULT_PROBLEM == DEFAULT_PROBLEM
     # and the registry resolves it to a real spec
     assert get_problem(DEFAULT_PROBLEM).name == DEFAULT_PROBLEM
+
+
+# -- the public API surface ----------------------------------------------------
+
+# The PR-4 redesign made `repro.api` THE public surface.  This snapshot pins
+# it: adding or removing a name is a deliberate, reviewed change (update the
+# list here AND the README quickstart), never an accidental side effect of a
+# refactor.
+PUBLIC_API = [
+    "BACKENDS",
+    "Backend",
+    "BatchSolveResult",
+    "CacheStats",
+    "PlaneCache",
+    "SolveConfig",
+    "SolveResult",
+    "SolverSession",
+    "get_backend",
+    "known_backends",
+    "solve_stream_session",
+]
+
+
+def test_public_api_snapshot():
+    import repro.api as api
+
+    assert sorted(api.__all__) == PUBLIC_API, (
+        "repro.api.__all__ drifted from the pinned public-API snapshot — "
+        "if intentional, update tests/test_arch_guard.py and the README"
+    )
+    # every advertised name must actually resolve
+    for name in api.__all__:
+        assert hasattr(api, name), f"repro.api.__all__ lists missing {name!r}"
+
+
+def test_backend_registry_covers_the_advertised_backends():
+    from repro.api import known_backends
+
+    assert known_backends() == [
+        "centralized", "protocol_sim", "sequential", "spmd"
+    ]

@@ -1,0 +1,323 @@
+"""The ``repro.api`` façade: one config, one result schema, warm planes.
+
+Four guarantees from the PR-4 redesign:
+
+1. **Bit-identity** — vertex-cover results through ``SolverSession`` are
+   bit-identical to the pre-redesign engine outputs pinned in
+   ``tests/golden_vc.json`` (solo, fpt, solve_many incl. padding +
+   compaction), i.e. the façade + compiled-plane cache is a pure reshaping.
+2. **Warm-plane reuse** — two same-shape solves trigger exactly ONE
+   trace/compile (asserted via ``cache_stats`` AND the
+   ``superstep.PLANE_TRACES`` ground-truth counter).
+3. **Backend parity** — spmd, protocol_sim and centralized agree with the
+   sequential reference on small graphs for vertex_cover AND max_clique.
+4. **Legacy shims** — ``engine.solve``/``solve_many`` still work, accept
+   the unified knob superset (the historical kwargs drift is gone), and
+   warn via ``DeprecationWarning``.
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    PlaneCache,
+    SolveConfig,
+    SolveResult,
+    SolverSession,
+    get_backend,
+    known_backends,
+)
+from repro.api.backends import config_from_legacy
+from repro.core import engine as E
+from repro.core import superstep
+from repro.graphs.generators import erdos_renyi
+from repro.problems.sequential import (
+    solve_sequential,
+    solve_sequential_max_clique,
+    verify_clique,
+    verify_cover,
+)
+
+GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden_vc.json").read_text()
+)
+
+
+def _check_golden(r: SolveResult, want: dict):
+    got = {
+        "best_size": int(r.best_size),
+        "best_sol": [int(w) for w in np.asarray(r.best_sol, np.uint32)],
+        "rounds": int(r.rounds),
+        "nodes_expanded": int(r.nodes_expanded),
+        "tasks_transferred": int(r.tasks_transferred),
+        "transfer_rounds": int(r.stats["transfer_rounds"]),
+        "transfer_bytes_total": int(r.stats["transfer_bytes_total"]),
+        "overflow": bool(r.stats["overflow"]),
+    }
+    assert got == want
+
+
+def _session_for(legacy_kw: dict, **extra) -> SolverSession:
+    """A session configured from a golden case's LEGACY solve kwargs."""
+    return SolverSession(
+        problem="vertex_cover",
+        config=config_from_legacy(**legacy_kw, **extra),
+    )
+
+
+# -- 1. session-vs-legacy bit-identity against the goldens ---------------------
+
+
+@pytest.mark.parametrize("label", sorted(GOLDEN["solo"]))
+def test_session_solo_bit_identical_to_golden(label):
+    case = GOLDEN["solo"][label]
+    gkw = case["graph"]
+    g = erdos_renyi(gkw["n"], gkw["p"], gkw["seed"])
+    r = _session_for(case["solve_kw"]).solve(g)
+    assert (r.problem, r.backend, r.found) == ("vertex_cover", "spmd", True)
+    _check_golden(r, case["result"])
+
+
+def test_session_fpt_bit_identical_to_golden():
+    case = GOLDEN["fpt"]
+    gkw = case["graph"]
+    g = erdos_renyi(gkw["n"], gkw["p"], gkw["seed"])
+    r = _session_for(
+        {"num_workers": 4}, mode="fpt", k=case["k"]
+    ).solve(g)
+    _check_golden(r, case["result"])
+
+
+def test_session_solve_many_bit_identical_to_golden():
+    """The batched plane through the session, including the padding (mixed n
+    within a W bucket) and host-side compaction paths."""
+    case = GOLDEN["many"]
+    graphs = [
+        erdos_renyi(n, case["p"], case["seed0"] + i)
+        for i, n in enumerate(case["sizes"])
+    ]
+    batch = _session_for(case["solve_kw"]).solve_many(graphs)
+    assert batch.compactions == case["compactions"]
+    assert [[W, n_max, idxs] for W, n_max, idxs in batch.buckets] == case["buckets"]
+    for r, want in zip(batch.results, case["results"]):
+        _check_golden(r, want)
+
+
+# -- 2. compiled-plane cache: hit/miss accounting + exactly one trace ----------
+
+
+def test_warm_plane_reuse_two_same_shape_solves_one_trace():
+    session = SolverSession(
+        problem="vertex_cover",
+        config=SolveConfig(num_workers=4, steps_per_round=8),
+    )
+    g1, g2 = erdos_renyi(22, 0.3, 0), erdos_renyi(22, 0.3, 1)
+    traces0 = superstep.PLANE_TRACES
+    r1 = session.solve(g1)
+    r2 = session.solve(g2)
+    assert superstep.PLANE_TRACES - traces0 == 1, (
+        "the second same-shape solve must reuse the compiled plane"
+    )
+    stats = session.cache_stats()
+    assert stats["misses"] == 1 and stats["hits"] == 1
+    assert stats["planes"] == 1 and stats["shapes"] == 1
+    # results are real solves, not cache artifacts
+    assert r1.best_size == solve_sequential(g1)[0]
+    assert r2.best_size == solve_sequential(g2)[0]
+    # a repeat of the SAME graph is warm and bit-identical
+    r1b = session.solve(g1)
+    assert superstep.PLANE_TRACES - traces0 == 1
+    assert r1b.best_size == r1.best_size and r1b.rounds == r1.rounds
+    assert (r1b.best_sol == r1.best_sol).all()
+
+
+def test_cache_distinguishes_shapes_and_is_shareable():
+    cache = PlaneCache()
+    cfg = SolveConfig(num_workers=4, steps_per_round=8)
+    s1 = SolverSession(problem="vertex_cover", config=cfg, cache=cache)
+    s2 = SolverSession(problem="vertex_cover", config=cfg, cache=cache)
+    s1.solve(erdos_renyi(20, 0.3, 0))
+    # different n -> different shape -> miss; same plane function though
+    s1.solve(erdos_renyi(26, 0.3, 0))
+    # second session, same cache, same shape as the first -> warm
+    s2.solve(erdos_renyi(20, 0.3, 1))
+    st = cache.stats()
+    assert st.misses == 2 and st.hits == 1 and st.planes == 1
+
+
+def test_batch_cache_key_includes_batch_width():
+    session = SolverSession(
+        problem="vertex_cover",
+        config=SolveConfig(num_workers=4, steps_per_round=8),
+    )
+    gs = [erdos_renyi(18, 0.3, s) for s in range(2)]
+    session.solve_many(gs)
+    stats1 = session.cache_stats()
+    session.solve_many([erdos_renyi(18, 0.3, s) for s in range(2, 4)])
+    stats2 = session.cache_stats()
+    assert stats1["misses"] == 1
+    assert stats2["misses"] == 1 and stats2["hits"] == stats1["hits"] + 1
+
+
+# -- 3. backend parity across problems -----------------------------------------
+
+
+@pytest.mark.parametrize("problem,seq_ref,verify", [
+    ("vertex_cover", solve_sequential, verify_cover),
+    ("max_clique", solve_sequential_max_clique, verify_clique),
+])
+@pytest.mark.parametrize("backend", ["spmd", "protocol_sim", "centralized"])
+def test_backend_parity_with_sequential_reference(problem, seq_ref, verify, backend):
+    cfg = SolveConfig(num_workers=4, steps_per_round=8)
+    for seed in (0, 1, 2):
+        g = erdos_renyi(15, 0.35, seed)
+        want, _, _ = seq_ref(g)
+        r = SolverSession(problem=problem, backend=backend, config=cfg).solve(g)
+        assert r.best_size == want, (problem, backend, seed)
+        assert r.backend == backend and r.problem == problem and r.found
+        assert verify(g, r.best_sol)
+
+
+def test_sequential_backend_matches_reference_too():
+    g = erdos_renyi(16, 0.35, 5)
+    want, _, _ = solve_sequential(g)
+    r = SolverSession(backend="sequential").solve(g)
+    assert r.best_size == want and r.backend == "sequential"
+
+
+def test_unknown_backend_lists_known_names():
+    with pytest.raises(ValueError, match="protocol_sim"):
+        get_backend("mpi")
+    assert known_backends() == sorted(known_backends())
+    # aliases resolve to the canonical backends
+    assert get_backend("protocol").name == "protocol_sim"
+    assert get_backend("central").name == "centralized"
+    assert get_backend("seq").name == "sequential"
+
+
+# -- 4. config validation + JSON round-trip ------------------------------------
+
+
+def test_config_json_round_trip_and_replace():
+    cfg = SolveConfig(num_workers=5, transfer_impl="gather", k=None)
+    again = SolveConfig.from_json(cfg.to_json())
+    assert again == cfg
+    assert cfg.replace(num_workers=7).num_workers == 7
+    # per-instance k survives the round trip as a tuple
+    many = SolveConfig(mode="fpt", k=[3, 4, 5])
+    assert many.k == (3, 4, 5)
+    assert SolveConfig.from_json(many.to_json()).k == (3, 4, 5)
+
+
+def test_config_save_load(tmp_path):
+    path = tmp_path / "cfg.json"
+    cfg = SolveConfig(num_workers=3, codec="basic")
+    cfg.save(path)
+    assert SolveConfig.load(path) == cfg
+
+
+@pytest.mark.parametrize("bad", [
+    dict(transfer_impl="rdma"),
+    dict(mode="ilp"),
+    dict(policy="fifo"),
+    dict(codec="huffman"),
+    dict(num_workers=0),
+    dict(compact_threshold=1.5),
+    dict(mode="fpt"),  # fpt without k
+])
+def test_config_validates_once_with_helpful_errors(bad):
+    with pytest.raises(ValueError):
+        SolveConfig(**bad)
+
+
+def test_config_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown SolveConfig key"):
+        SolveConfig.from_dict({"num_wrokers": 4})
+
+
+def test_solo_solve_rejects_per_instance_k():
+    cfg = SolveConfig(mode="fpt", k=(3, 4))
+    with pytest.raises(ValueError, match="per-instance"):
+        SolverSession(config=cfg).solve(erdos_renyi(10, 0.3, 0))
+
+
+# -- 5. async admission (submit -> ticket -> flush) ----------------------------
+
+
+def test_submit_flush_result_round_trip():
+    session = SolverSession(
+        problem="vertex_cover",
+        config=SolveConfig(num_workers=4, steps_per_round=8, batch_size=2),
+    )
+    gs = [erdos_renyi(18, 0.3, s) for s in range(3)]
+    tickets = [session.submit(g) for g in gs]
+    assert session.pending() == 3
+    # two of three fill a batch_size=2 plane; poll solves just that plane
+    polled = session.poll()
+    assert len(polled) == 2 and session.pending() == 1
+    flushed = session.flush()
+    assert len(flushed) == 1 and session.pending() == 0
+    for t, g in zip(tickets, gs):
+        want, _, _ = solve_sequential(g)
+        assert session.result(t).best_size == want
+    with pytest.raises(KeyError):
+        session.result(tickets[0])  # result() pops
+
+
+# -- 6. legacy shims: superset kwargs + DeprecationWarning ---------------------
+
+
+def test_legacy_solve_warns_and_accepts_compact_threshold():
+    g = erdos_renyi(18, 0.3, 0)
+    with pytest.warns(DeprecationWarning, match="SolverSession"):
+        r = E.solve(g, num_workers=4, steps_per_round=8, compact_threshold=0.5)
+    assert r.best_size == solve_sequential(g)[0]
+
+
+def test_legacy_solve_many_warns_and_accepts_mesh_none():
+    gs = [erdos_renyi(18, 0.3, s) for s in range(2)]
+    with pytest.warns(DeprecationWarning, match="SolverSession"):
+        batch = E.solve_many(gs, num_workers=4, steps_per_round=8, mesh=None)
+    assert [r.best_size for r in batch.results] == [
+        solve_sequential(g)[0] for g in gs
+    ]
+    # a real mesh on the batched plane is still unimplemented -> loud error
+    with pytest.raises(ValueError, match="mesh"):
+        E.solve_many(gs, num_workers=4, mesh=object())
+
+
+def test_legacy_shims_share_one_plane_cache():
+    from repro.api.backends import LEGACY_CACHE
+
+    g1, g2 = erdos_renyi(21, 0.3, 0), erdos_renyi(21, 0.3, 1)
+    with pytest.warns(DeprecationWarning):
+        E.solve(g1, num_workers=4, steps_per_round=8)
+        hits0 = LEGACY_CACHE.stats().hits
+        E.solve(g2, num_workers=4, steps_per_round=8)
+    assert LEGACY_CACHE.stats().hits == hits0 + 1
+
+
+# -- 7. the session-backed serving stream --------------------------------------
+
+
+def test_solve_stream_session_mixed_problems_shared_cache():
+    from repro.api import solve_stream_session
+
+    gs = [erdos_renyi(16, 0.35, s) for s in range(4)]
+    probs = ["vertex_cover", "max_clique", "vertex_cover", "max_clique"]
+    cache = PlaneCache()
+    out = solve_stream_session(
+        gs, batch_size=2, problem=probs, cache=cache,
+        config=SolveConfig(num_workers=4, steps_per_round=8),
+    )
+    assert [r.problem for r in out] == probs
+    for g, r in zip(gs, out):
+        if r.problem == "vertex_cover":
+            assert r.best_size == solve_sequential(g)[0]
+        else:
+            assert r.best_size == solve_sequential_max_clique(g)[0]
+    # two problems x one (W, B) plane each -> exactly two compiled planes
+    assert cache.stats().planes == 2
