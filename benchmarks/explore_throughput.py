@@ -1,0 +1,126 @@
+"""Exploration-plane throughput: fused vs reference, in nodes expanded/sec.
+
+The paper's premise is that workers spend their time *branching*; this
+benchmark measures exactly that hot path and A/Bs the two ``explore_impl``
+paths (EXPERIMENTS.md §F):
+
+* **reference** — per-task callables (task_bound / branch_once /
+  child_bound as separate vmapped sweeps) + the full-capacity ``top_k``
+  frontier pop every round;
+* **fused**     — the plugin's one-pass batched ``expand_tasks`` (shared
+  degrees/popcounts, arithmetic child bounds, Pallas bitset kernel on TPU)
+  + the cheap depth-major frontier pop.
+
+Both planes are warmed first (compile excluded), solve the SAME instances,
+and are asserted bit-identical (best, rounds, nodes) — the speedup is pure
+hot-path efficiency, not a different search.
+
+``run(smoke=True)`` is in the CI bench-smoke set and GATES the win: fused
+must expand at least ``MIN_FUSED_SPEEDUP``× more nodes/sec than reference
+on the gate shape (max-clique — no reduction fixpoint inside the expansion,
+so the measurement isolates the expand+frontier costs this plane attacks).
+A vertex-cover row is recorded alongside for the trajectory.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.api import SolveConfig, SolverSession
+from repro.graphs.generators import erdos_renyi
+
+# acceptance bar (ISSUE 5): fused >= 1.3x reference nodes/sec on the smoke
+# gate shape, recorded in BENCH_smoke.json per PR.
+MIN_FUSED_SPEEDUP = 1.3
+
+
+def _throughput(problem, graphs, impl, *, workers, spr, lanes, repeats):
+    """Warm a plane for ``impl``, run ``repeats`` timed sweeps over
+    ``graphs`` and keep the FASTEST (the sweep least disturbed by the host —
+    every sweep does identical device work, so min-time is the honest
+    throughput on a shared CI box); returns (nodes_per_sec, [results])."""
+    session = SolverSession(
+        problem=problem,
+        config=SolveConfig(
+            num_workers=workers,
+            steps_per_round=spr,
+            lanes=lanes,
+            explore_impl=impl,
+        ),
+    )
+    for g in graphs:  # cold pass: trace + compile once per shape
+        session.solve(g)
+    best_wall, results = float("inf"), []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        sweep = [session.solve(g) for g in graphs]
+        wall = time.perf_counter() - t0
+        if wall < best_wall:
+            best_wall, results = wall, sweep
+    nodes = sum(r.nodes_expanded for r in results)
+    return nodes / max(best_wall, 1e-9), results
+
+
+def _ab(problem, graphs, *, workers, spr, lanes, repeats):
+    out = {}
+    for impl in ("reference", "fused"):
+        nps, results = _throughput(
+            problem, graphs, impl,
+            workers=workers, spr=spr, lanes=lanes, repeats=repeats,
+        )
+        out[impl] = (nps, results)
+    # same search, bit for bit — the speedup is hot-path cost, not pruning
+    for a, b in zip(out["reference"][1], out["fused"][1]):
+        assert (a.best_size, a.rounds, a.nodes_expanded) == (
+            b.best_size, b.rounds, b.nodes_expanded
+        ), "fused explore diverged from reference"
+        assert (a.best_sol == b.best_sol).all()
+    return out["reference"][0], out["fused"][0]
+
+
+def run(smoke: bool = False) -> dict:
+    # engine-default explore knobs (steps_per_round=32, lanes=1): the gate
+    # measures the path real solves run, not a cherry-picked shape
+    if smoke:
+        clique_kw = dict(n=40, p=0.5, seeds=(0, 1), workers=4, spr=32,
+                         lanes=1, repeats=4)
+        vc_kw = dict(n=28, p=0.3, seeds=(0,), workers=4, spr=32,
+                     lanes=1, repeats=4)
+    else:
+        clique_kw = dict(n=64, p=0.4, seeds=(0, 1, 2), workers=8, spr=32,
+                         lanes=1, repeats=5)
+        vc_kw = dict(n=44, p=0.25, seeds=(0, 1), workers=8, spr=32,
+                     lanes=1, repeats=5)
+
+    rows = {}
+    for problem, kw in (("max_clique", clique_kw), ("vertex_cover", vc_kw)):
+        graphs = [erdos_renyi(kw["n"], kw["p"], s) for s in kw["seeds"]]
+        ref_nps, fused_nps = _ab(
+            problem, graphs, workers=kw["workers"], spr=kw["spr"],
+            lanes=kw["lanes"], repeats=kw["repeats"],
+        )
+        speedup = fused_nps / max(ref_nps, 1e-9)
+        rows[problem] = dict(
+            n=kw["n"], p=kw["p"], instances=len(graphs),
+            workers=kw["workers"], steps_per_round=kw["spr"],
+            lanes=kw["lanes"],
+            reference_nodes_per_s=round(ref_nps),
+            fused_nodes_per_s=round(fused_nps),
+            fused_speedup=round(speedup, 2),
+        )
+        print(f"{problem:13s} G({kw['n']}, {kw['p']}) x{len(graphs)}: "
+              f"reference {ref_nps:10.0f} nodes/s | fused {fused_nps:10.0f} "
+              f"nodes/s | {speedup:.2f}x")
+
+    gate = rows["max_clique"]["fused_speedup"]
+    if smoke:  # the CI gate; full-size local runs just report
+        assert gate >= MIN_FUSED_SPEEDUP, (
+            f"fused exploration plane regressed: only {gate:.2f}x the "
+            f"reference nodes/sec (< {MIN_FUSED_SPEEDUP}x; benchmark-gated "
+            f"CI, EXPERIMENTS.md §F)"
+        )
+    return dict(problem="max_clique", gate_speedup=gate, shapes=rows)
+
+
+if __name__ == "__main__":
+    run()

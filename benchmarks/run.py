@@ -7,6 +7,7 @@
   batch_throughput  multi-instance solve plane vs sequential loop
   clique_smoke      max-clique on the generic plane vs sequential reference
   session_warm      cold-vs-warm SolverSession (compiled-plane cache gate)
+  explore_throughput fused vs reference exploration plane, nodes/sec (gated)
   balancer_bench    beyond-paper serving balancer
   kernel_bench      kernel arithmetic-intensity table
 
@@ -32,6 +33,7 @@ from benchmarks import (
     clique_smoke,
     encoding_bytes,
     engine_throughput,
+    explore_throughput,
     kernel_bench,
     protocol_stats,
     session_warm,
@@ -45,6 +47,7 @@ ALL = {
     "batch_throughput": batch_throughput,
     "clique_smoke": clique_smoke,
     "session_warm": session_warm,
+    "explore_throughput": explore_throughput,
     "balancer_bench": balancer_bench,
     "kernel_bench": kernel_bench,
     "speedup": speedup,
@@ -52,7 +55,8 @@ ALL = {
 
 # kept fast enough for a per-PR CI job; full runs remain opt-in by name
 SMOKE_DEFAULT = (
-    "encoding_bytes", "batch_throughput", "clique_smoke", "session_warm"
+    "encoding_bytes", "batch_throughput", "clique_smoke", "session_warm",
+    "explore_throughput",
 )
 
 SMOKE_JSON = "BENCH_smoke.json"

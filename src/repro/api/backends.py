@@ -97,6 +97,7 @@ def solve_spmd(
             packed_status=cfg.packed_status,
             skip_empty_transfer=cfg.skip_empty_transfer,
             transfer_impl=cfg.transfer_impl,
+            explore_impl=cfg.explore_impl,
             donate_k=cfg.donate_k,
             chunk_rounds=cfg.chunk_rounds,
             fpt_bound=(spec.fpt_target(k) if use_fpt else None),

@@ -70,8 +70,8 @@ class PlaneCache:
         # share planes
         knobs = (
             cfg.steps_per_round, cfg.lanes, cfg.policy, cfg.packed_status,
-            cfg.skip_empty_transfer, cfg.transfer_impl, cfg.donate_k,
-            cfg.chunk_rounds,
+            cfg.skip_empty_transfer, cfg.transfer_impl, cfg.explore_impl,
+            cfg.donate_k, cfg.chunk_rounds,
         )
         return (kind, spec, knobs, pad, use_fpt)
 
@@ -93,6 +93,7 @@ class PlaneCache:
                 packed_status=cfg.packed_status,
                 skip_empty_transfer=cfg.skip_empty_transfer,
                 transfer_impl=cfg.transfer_impl,
+                explore_impl=cfg.explore_impl,
                 donate_k=cfg.donate_k,
                 chunk_rounds=cfg.chunk_rounds,
                 use_fpt=use_fpt,

@@ -26,7 +26,6 @@ from typing import Optional, Union
 
 _MODES = ("bnb", "fpt")
 _POLICIES = ("priority", "random")
-_TRANSFER_IMPLS = ("sparse", "gather")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +48,10 @@ class SolveConfig:
     packed_status: bool = True
     skip_empty_transfer: bool = True
     transfer_impl: str = "sparse"
+    # exploration hot path: "fused" = one-pass batched expand_tasks + cheap
+    # depth-major frontier pop (bit-identical, faster); "reference" = the
+    # per-task callables + full-capacity top_k kept for A/B and goldens.
+    explore_impl: str = "fused"
     donate_k: int = 1
     chunk_rounds: int = 16
     mode: str = "bnb"
@@ -84,9 +87,14 @@ class SolveConfig:
 
         choice("mode", self.mode, _MODES)
         choice("policy", self.policy, _POLICIES)
-        choice("transfer_impl", self.transfer_impl, _TRANSFER_IMPLS)
-        # codec names live in the encoding registry — same fail-helpfully
-        # contract as the problem registry
+        # impl names live with the engine (one source of truth — the config
+        # can never accept a value the superstep rejects, or vice versa);
+        # codec names live in the encoding registry.  Same fail-helpfully
+        # contract as the problem registry, all imported lazily.
+        from repro.core.superstep import EXPLORE_IMPLS, TRANSFER_IMPLS
+
+        choice("transfer_impl", self.transfer_impl, TRANSFER_IMPLS)
+        choice("explore_impl", self.explore_impl, EXPLORE_IMPLS)
         from repro.core.encoding import make_codec
 
         make_codec(self.codec, 1)

@@ -99,6 +99,7 @@ def from_engine_result(r, *, problem: str, backend: str = "spmd") -> SolveResult
         tasks_transferred=r.tasks_transferred,
         stats={
             "overflow": r.overflow,
+            "overflow_count": r.overflow_count,
             "control_bytes_per_round": r.control_bytes_per_round,
             "transfer_rounds": r.transfer_rounds,
             "transfer_bytes_total": r.transfer_bytes_total,
@@ -121,6 +122,8 @@ def from_sim_result(r, *, problem: str, backend: str, wall_s: float) -> SolveRes
         nodes_expanded=s.nodes_expanded,
         tasks_transferred=s.tasks_transferred,
         stats={
+            # host explorers keep unbounded Python frontiers: nothing to drop
+            "overflow_count": 0,
             "ticks": r.ticks,
             "failed_requests": s.failed_requests,
             "termination_cancelled": s.termination_cancelled,
@@ -145,6 +148,7 @@ def from_sequential(best, sol, stats, *, problem: str, wall_s: float) -> SolveRe
         nodes_expanded=stats.nodes,
         tasks_transferred=0,
         stats={
+            "overflow_count": 0,  # host recursion: no fixed-capacity pool
             "pruned": stats.pruned,
             "solutions": stats.solutions,
             "max_depth": stats.max_depth,

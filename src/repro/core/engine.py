@@ -61,6 +61,9 @@ class EngineResult:
     tasks_transferred: int
     wall_s: float
     overflow: bool
+    # exact number of tasks lost to frontier saturation (summed over
+    # workers) — 0 under engine-sized capacity; the loud twin of the bool
+    overflow_count: int
     # collective-traffic accounting (bytes) for the roofline / paper §4.3.
     # Control plane is a static per-round budget; the data plane is counted
     # on device: `transfer_rounds` supersteps ran the transfer collective and
@@ -126,6 +129,7 @@ def solve(
     packed_status: bool = True,
     skip_empty_transfer: bool = True,
     transfer_impl: str = "sparse",
+    explore_impl: str = "fused",
     donate_k: int = 1,
     chunk_rounds: int = 16,
     mode: str = "bnb",
@@ -164,6 +168,7 @@ def solve(
         packed_status=packed_status,
         skip_empty_transfer=skip_empty_transfer,
         transfer_impl=transfer_impl,
+        explore_impl=explore_impl,
         donate_k=donate_k,
         chunk_rounds=chunk_rounds,
         mode=mode,
@@ -274,6 +279,7 @@ def _extract_result(
         tasks_transferred=int(host_state["tasks_sent"][lane].sum()),
         wall_s=wall_s,
         overflow=bool(host_state["overflow"][lane].any()),
+        overflow_count=int(host_state["dropped"][lane].sum()),
         control_bytes_per_round=4 * (1 if packed_status else 3) * num_workers,
         transfer_rounds=transfer_rounds,
         transfer_bytes_total=4 * payload_words,
@@ -289,6 +295,7 @@ def _fetch_batch_state(state: WorkerState) -> dict:
         "nodes_expanded": np.asarray(s.nodes_expanded),
         "tasks_sent": np.asarray(s.tasks_sent),
         "overflow": np.asarray(s.frontier.overflow),
+        "dropped": np.asarray(s.frontier.dropped),
         "transfer_rounds": np.asarray(s.transfer_rounds),
         "payload_words": np.asarray(s.payload_words),
     }
@@ -313,6 +320,7 @@ def solve_many(
     packed_status: bool = True,
     skip_empty_transfer: bool = True,
     transfer_impl: str = "sparse",
+    explore_impl: str = "fused",
     donate_k: int = 1,
     chunk_rounds: int = 16,
     mode: str = "bnb",
@@ -378,6 +386,7 @@ def solve_many(
         packed_status=packed_status,
         skip_empty_transfer=skip_empty_transfer,
         transfer_impl=transfer_impl,
+        explore_impl=explore_impl,
         donate_k=donate_k,
         chunk_rounds=chunk_rounds,
         mode=mode,

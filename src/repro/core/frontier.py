@@ -10,9 +10,23 @@ device the same object is a flat pool of (mask, sol, depth) slots with an
 * **donate** pops the *shallowest* active task (the paper's highest-priority
   leaf, Alg. 6) — quasi-horizontal exploration.
 
+Two deepest-first selection paths serve the explore phase:
+
+* :func:`pop_deepest` — the reference full-capacity ``lax.top_k`` (a sort
+  over all CAP slots every round);
+* :func:`pop_deepest_cheap` — the fused plane's depth-major selection: per
+  lane, one max-reduce finds the deepest pending depth (the bucket) and one
+  ``argmax`` over the reversed slot index picks the lowest slot inside it.
+  Per round this is a few elementwise reduces per lane instead of sorting
+  the whole pool, so selection cost scales with the ``lanes`` actually
+  popped, not with capacity — and the lexicographic (depth desc, slot asc)
+  order reproduces ``top_k`` exactly, keeping the two paths bit-identical.
+
 Capacity is sized by the engine to ``4·n`` (depth ≤ n and each expansion is
-net +lanes), and an ``overflow`` flag records any dropped push — tests assert
-it never fires.
+net +lanes); saturated pushes are dropped, with an ``overflow`` flag AND a
+cumulative ``dropped`` counter recording exactly how many tasks were lost —
+the engine surfaces the count as ``overflow_count`` so saturation is never
+silent (tests assert it stays 0 under engine-sized capacity).
 """
 
 from __future__ import annotations
@@ -31,6 +45,7 @@ class Frontier(NamedTuple):
     depths: jnp.ndarray  # (CAP,) int32
     active: jnp.ndarray  # (CAP,) bool
     overflow: jnp.ndarray  # () bool -- a push was ever dropped
+    dropped: jnp.ndarray  # () int32 -- cumulative count of dropped pushes
 
     @property
     def capacity(self) -> int:
@@ -51,6 +66,7 @@ def make_frontier(capacity: int, W: int) -> Frontier:
         depths=jnp.zeros((capacity,), jnp.int32),
         active=jnp.zeros((capacity,), bool),
         overflow=jnp.bool_(False),
+        dropped=jnp.int32(0),
     )
 
 
@@ -64,6 +80,55 @@ def pop_deepest(f: Frontier, count: int):
     valid = f.active[slots]
     # top_k slot indices are unique, so a plain scatter-False is safe (slots
     # that were already inactive just stay inactive).
+    return (
+        f._replace(active=f.active.at[slots].set(False)),
+        f.masks[slots],
+        f.sols[slots],
+        f.depths[slots],
+        valid,
+    )
+
+
+def pop_deepest_cheap(f: Frontier, count: int):
+    """Pop up to ``count`` deepest tasks WITHOUT the full-capacity sort.
+
+    The fused exploration plane's selection path: per lane, one max-reduce
+    finds the deepest pending depth (the bucket) and one argmax over the
+    reversed slot index picks the lowest slot inside that bucket — a
+    lexicographic (depth desc, slot asc) selection from two O(CAP)
+    elementwise reduces, unrolled ``count`` times.  With the engine's small
+    static ``lanes`` this replaces the per-round ``top_k`` sort with a
+    handful of reductions, and the two-phase form needs no depth·capacity
+    composite key, so it cannot overflow for ANY capacity/depth a caller
+    pins.
+
+    Same contract as :func:`pop_deepest` (including its precondition that
+    active depths are non-negative — the engine only pushes depths ≥ 0):
+    the post-pop ``active`` set and the valid lanes (tasks, order, flags)
+    are bit-identical to the top_k path (property-tested), so
+    ``explore_impl="fused"`` and ``"reference"`` traces stay
+    interchangeable.
+    """
+    cap = f.capacity
+    rev = jnp.arange(cap - 1, -1, -1, dtype=jnp.int32)
+    act = f.active
+    slots_l, valids_l = [], []
+    for _ in range(count):
+        d = jnp.max(jnp.where(act, f.depths, jnp.int32(-1)))
+        s = jnp.argmax(
+            jnp.where(act & (f.depths == d), rev, jnp.int32(-1))
+        ).astype(jnp.int32)
+        slots_l.append(s)
+        valids_l.append(d >= 0)
+        if count > 1:
+            act = act.at[s].set(False)
+    if count == 1:
+        # the engine's default single-lane pop: no stacking round-trip
+        slots = slots_l[0][None]
+        valid = valids_l[0][None]
+    else:
+        slots = jnp.stack(slots_l)
+        valid = jnp.stack(valids_l)
     return (
         f._replace(active=f.active.at[slots].set(False)),
         f.masks[slots],
@@ -124,8 +189,10 @@ def pop_k_shallowest(f: Frontier, count: int, limit=None):
 def push_many(f: Frontier, masks, sols, depths, valid):
     """Push up to K tasks (valid flags mark real ones).
 
-    Free slots are assigned in order; pushes beyond capacity set ``overflow``
-    and are dropped (engine sizes capacity so this never happens)."""
+    Free slots are assigned in order; pushes beyond capacity are dropped,
+    setting ``overflow`` and adding the exact number of lost tasks to the
+    cumulative ``dropped`` counter (engine sizes capacity so neither ever
+    moves; the counter makes saturation loud when a caller undersizes)."""
     K = valid.shape[0]
     free = ~f.active  # (CAP,)
     # rank of each free slot among free slots (0-based)
@@ -134,7 +201,8 @@ def push_many(f: Frontier, masks, sols, depths, valid):
     task_rank = jnp.cumsum(valid.astype(jnp.int32)) - 1  # (K,)
     n_free = free.sum()
     placeable = valid & (task_rank < n_free)
-    overflow = f.overflow | (valid & ~placeable).any()
+    n_dropped = (valid & ~placeable).sum().astype(jnp.int32)
+    overflow = f.overflow | (n_dropped > 0)
     # slot index for each placeable task: the free slot with matching rank.
     # Build map rank -> slot; non-free slots scatter out-of-range (dropped).
     cap = f.capacity
@@ -157,6 +225,7 @@ def push_many(f: Frontier, masks, sols, depths, valid):
         depths=place(f.depths, depths.astype(jnp.int32)),
         active=f.active.at[tgt].set(True, mode="drop"),
         overflow=overflow,
+        dropped=f.dropped + n_dropped,
     )
 
 

@@ -58,10 +58,33 @@ from repro.core.frontier import (
     Frontier,
     make_frontier,
     pop_deepest,
+    pop_deepest_cheap,
     pop_k_shallowest,
     push_many,
 )
-from repro.problems.base import DATA_IN_AXES, BranchingProblem, ProblemData
+from repro.problems.base import (
+    DATA_IN_AXES,
+    BranchingProblem,
+    ProblemData,
+    compose_expand_tasks,
+    resolve_expand,
+)
+
+# explore-phase implementations (§Perf, EXPERIMENTS.md §F):
+#   "reference" — per-task callables (task_bound / branch_once / child_bound
+#                 as three separate vmapped calls) + full-capacity top_k pop;
+#                 no repro.kernels dependency (arch-guarded), the bit-exact
+#                 baseline kept for A/B and goldens;
+#   "fused"     — the problem's one-pass batched expand_tasks (hand-fused
+#                 impls share degrees/popcounts and ride the Pallas bitset
+#                 kernel on TPU; other plugins get the composed default) +
+#                 the cheap depth-major frontier pop.  Bit-identical to the
+#                 reference by contract (golden- and property-tested).
+# These tuples are THE registries for the two hot-path knobs —
+# SolveConfig._validate imports them, so the engine and the config can never
+# disagree about what is valid.
+EXPLORE_IMPLS = ("fused", "reference")
+TRANSFER_IMPLS = ("sparse", "gather")
 
 
 def _shard_map(body, *, mesh, in_specs, out_specs):
@@ -96,6 +119,14 @@ class WorkerState(NamedTuple):
     transfer_rounds: jnp.ndarray  # () int32 -- rounds that ran the data plane
     payload_words: jnp.ndarray  # () int32 -- u32 words moved by the data plane
 
+    @property
+    def overflow_count(self) -> jnp.ndarray:
+        """Tasks this worker lost to frontier saturation (cumulative () int32
+        stat, owned by ``frontier.dropped`` — push_many maintains it).  0
+        under engine-sized capacity; surfaced per instance as
+        ``SolveResult.stats["overflow_count"]``."""
+        return self.frontier.dropped
+
 
 def make_worker_state(capacity: int, W: int, initial_best: int) -> WorkerState:
     z = jnp.int32(0)
@@ -117,7 +148,11 @@ def make_worker_state(capacity: int, W: int, initial_best: int) -> WorkerState:
 
 
 def _explore_one_round(
-    problem: BranchingProblem, data: ProblemData, state: WorkerState, lanes: int
+    problem: BranchingProblem,
+    data: ProblemData,
+    state: WorkerState,
+    lanes: int,
+    explore_impl: str = "reference",
 ):
     """Pop up to ``lanes`` deepest tasks, expand each, push children.
 
@@ -125,13 +160,26 @@ def _explore_one_round(
     the internal objective, gates expansion), ``branch_once`` (one node
     expansion -> :class:`BranchStep`) and ``child_bound`` (cheap birth-time
     prune).  The engine always minimizes internal values.
+
+    ``explore_impl`` picks the hot-path implementation (:data:`EXPLORE_IMPLS`):
+    the reference path sweeps the lane batch once per callable (plus a
+    full-capacity top_k pop); the fused path pops via the cheap depth-major
+    selection and expands through the plugin's one-pass ``expand_tasks``.
+    Both produce bit-identical states.
     """
-    f, masks, sols, depths, valid = pop_deepest(state.frontier, lanes)
+    if explore_impl == "fused":
+        f, masks, sols, depths, valid = pop_deepest_cheap(state.frontier, lanes)
+        expand = resolve_expand(problem)
+    else:
+        f, masks, sols, depths, valid = pop_deepest(state.frontier, lanes)
+        # ALWAYS the composed per-task callables — one source of truth with
+        # the fused path's default, so the two can never desynchronize
+        expand = compose_expand_tasks(problem)
+    ex = expand(data, masks, sols)
+    bounds, res = ex.bound, ex.step
+    left_bound, right_bound = ex.left_bound, ex.right_bound
 
-    bounds = jax.vmap(lambda m, s: problem.task_bound(data, m, s))(masks, sols)
     not_pruned = valid & (bounds < state.best_val)
-
-    res = jax.vmap(lambda m, s: problem.branch_once(data, m, s))(masks, sols)
 
     # terminal candidates -> best update (paper: handleSolution + bestval)
     term = not_pruned & res.is_terminal & (res.terminal_value < state.best_val)
@@ -151,18 +199,8 @@ def _explore_one_round(
     # the cheap bound says they cannot beat best (host reference does the same).
     expandable = not_pruned & ~res.is_terminal
     cdepth = depths + 1
-    lvalid = expandable & (
-        jax.vmap(lambda m, s: problem.child_bound(data, m, s))(
-            res.left_mask, res.left_sol
-        )
-        < new_best
-    )
-    rvalid = expandable & (
-        jax.vmap(lambda m, s: problem.child_bound(data, m, s))(
-            res.right_mask, res.right_sol
-        )
-        < new_best
-    )
+    lvalid = expandable & (left_bound < new_best)
+    rvalid = expandable & (right_bound < new_best)
     all_masks = jnp.concatenate([res.left_mask, res.right_mask], axis=0)
     all_sols = jnp.concatenate([res.left_sol, res.right_sol], axis=0)
     all_depths = jnp.concatenate([cdepth, cdepth], axis=0)
@@ -184,9 +222,10 @@ def explore_phase(
     state: WorkerState,
     steps: int,
     lanes: int,
+    explore_impl: str = "reference",
 ) -> WorkerState:
     def body(_, s):
-        return _explore_one_round(problem, data, s, lanes)
+        return _explore_one_round(problem, data, s, lanes, explore_impl)
 
     return jax.lax.fori_loop(0, steps, body, state)
 
@@ -266,6 +305,7 @@ def superstep(
     skip_empty_transfer: bool = True,
     transfer_impl: str = "sparse",
     donate_k: int = 1,
+    explore_impl: str = "reference",
 ):
     """One BSP round for a single worker (replicated via vmap/shard_map).
 
@@ -290,11 +330,23 @@ def superstep(
       donate_k            — a matched donor sends up to ``donate_k`` of its
                             shallowest tasks (always keeping one), filling a
                             starved worker in one rebalance round.
+      explore_impl        — "fused": one-pass batched expansion + cheap
+                            depth-major frontier pop; "reference": per-task
+                            callables + full-capacity top_k.  Bit-identical
+                            traces (see :data:`EXPLORE_IMPLS`).
 
     Returns (state, done) where done is the exact global quiescence flag.
     """
-    if transfer_impl not in ("sparse", "gather"):
-        raise ValueError(f"unknown transfer_impl: {transfer_impl!r}")
+    if transfer_impl not in TRANSFER_IMPLS:
+        raise ValueError(
+            f"unknown transfer_impl: {transfer_impl!r}; "
+            f"valid: {', '.join(TRANSFER_IMPLS)}"
+        )
+    if explore_impl not in EXPLORE_IMPLS:
+        raise ValueError(
+            f"unknown explore_impl: {explore_impl!r}; "
+            f"valid: {', '.join(EXPLORE_IMPLS)}"
+        )
     if donate_k < 1:
         # a matched donor must ship at least one task, or the failure-free
         # guarantee (a matched idle worker ALWAYS receives work) breaks
@@ -305,7 +357,9 @@ def superstep(
     rec_words = 2 * W + 1 + transfer_pad_words
 
     # 1. explore
-    state = explore_phase(problem, data, state, steps_per_round, lanes)
+    state = explore_phase(
+        problem, data, state, steps_per_round, lanes, explore_impl
+    )
 
     # 2. control plane through the "center" + 5. best-value broadcast
     pending = state.frontier.pending()
@@ -423,6 +477,7 @@ def build_superstep_fn(
     skip_empty_transfer: bool = True,
     transfer_impl: str = "sparse",
     donate_k: int = 1,
+    explore_impl: str = "reference",
     mesh=None,
     axis_name: str = "workers",
 ):
@@ -448,6 +503,7 @@ def build_superstep_fn(
         skip_empty_transfer=skip_empty_transfer,
         transfer_impl=transfer_impl,
         donate_k=donate_k,
+        explore_impl=explore_impl,
     )
     if mesh is None:
         vstep = jax.vmap(step, axis_name=axis_name)
@@ -505,6 +561,7 @@ def build_plane_fn(
     skip_empty_transfer: bool = True,
     transfer_impl: str = "sparse",
     donate_k: int = 1,
+    explore_impl: str = "reference",
     chunk_rounds: int = 16,
     use_fpt: bool = False,
     axis_name: str = "workers",
@@ -532,6 +589,7 @@ def build_plane_fn(
         skip_empty_transfer=skip_empty_transfer,
         transfer_impl=transfer_impl,
         donate_k=donate_k,
+        explore_impl=explore_impl,
     )
 
     def cond(carry):
@@ -570,6 +628,7 @@ def build_batch_plane_fn(
     skip_empty_transfer: bool = True,
     transfer_impl: str = "sparse",
     donate_k: int = 1,
+    explore_impl: str = "reference",
     chunk_rounds: int = 16,
     use_fpt: bool = False,
     axis_name: str = "workers",
@@ -597,6 +656,7 @@ def build_batch_plane_fn(
         skip_empty_transfer=skip_empty_transfer,
         transfer_impl=transfer_impl,
         donate_k=donate_k,
+        explore_impl=explore_impl,
     )
 
     def one_instance(data, state):
@@ -668,6 +728,7 @@ def build_batch_superstep_fn(
     skip_empty_transfer: bool = True,
     transfer_impl: str = "sparse",
     donate_k: int = 1,
+    explore_impl: str = "reference",
     axis_name: str = "workers",
 ):
     """Jitted ``state -> (state, done)`` over (B, P, ...) stacked state.
@@ -690,6 +751,7 @@ def build_batch_superstep_fn(
         skip_empty_transfer=skip_empty_transfer,
         transfer_impl=transfer_impl,
         donate_k=donate_k,
+        explore_impl=explore_impl,
     )
 
     def one_instance(data, state):
@@ -718,6 +780,7 @@ def build_batch_chunk_fn(
     skip_empty_transfer: bool = True,
     transfer_impl: str = "sparse",
     donate_k: int = 1,
+    explore_impl: str = "reference",
     chunk_rounds: int = 16,
     fpt_bounds: Optional[jnp.ndarray] = None,
     axis_name: str = "workers",
@@ -752,6 +815,7 @@ def build_batch_chunk_fn(
         skip_empty_transfer=skip_empty_transfer,
         transfer_impl=transfer_impl,
         donate_k=donate_k,
+        explore_impl=explore_impl,
         chunk_rounds=chunk_rounds,
         use_fpt=(fpt_bounds is not None),
         axis_name=axis_name,
@@ -775,6 +839,7 @@ def build_chunk_fn(
     skip_empty_transfer: bool = True,
     transfer_impl: str = "sparse",
     donate_k: int = 1,
+    explore_impl: str = "reference",
     chunk_rounds: int = 16,
     fpt_bound: Optional[int] = None,
     mesh=None,
@@ -809,6 +874,7 @@ def build_chunk_fn(
             skip_empty_transfer=skip_empty_transfer,
             transfer_impl=transfer_impl,
             donate_k=donate_k,
+            explore_impl=explore_impl,
             chunk_rounds=chunk_rounds,
             use_fpt=(fpt_bound is not None),
             axis_name=axis_name,
@@ -831,6 +897,7 @@ def build_chunk_fn(
         skip_empty_transfer=skip_empty_transfer,
         transfer_impl=transfer_impl,
         donate_k=donate_k,
+        explore_impl=explore_impl,
     )
 
     def cond(carry):

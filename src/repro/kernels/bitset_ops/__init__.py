@@ -1,9 +1,27 @@
-from repro.kernels.bitset_ops.ops import degrees_op, max_degree_vertex
-from repro.kernels.bitset_ops.ref import batched_degrees_ref, max_degree_vertex_ref
+from repro.kernels.bitset_ops.ops import (
+    default_interpret,
+    degrees_auto,
+    degrees_op,
+    expand_stats_auto,
+    expand_stats_op,
+    kernels_native,
+    max_degree_vertex,
+)
+from repro.kernels.bitset_ops.ref import (
+    batched_degrees_ref,
+    expand_stats_ref,
+    max_degree_vertex_ref,
+)
 
 __all__ = [
+    "default_interpret",
+    "degrees_auto",
     "degrees_op",
+    "expand_stats_auto",
+    "expand_stats_op",
+    "kernels_native",
     "max_degree_vertex",
     "batched_degrees_ref",
+    "expand_stats_ref",
     "max_degree_vertex_ref",
 ]

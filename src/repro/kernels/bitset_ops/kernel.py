@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: batched bitset degrees (the B&B compute hot spot).
+"""Pallas TPU kernels: batched bitset degrees + fused expand stats (the B&B
+compute hot spot).
 
 TPU-native rethink of the GPU bitset tricks (no warp ballots / popc
 intrinsics assumed): the adjacency bitset matrix ``(n, W)`` lives wholly in
@@ -13,17 +14,51 @@ Grid:  (ceil(T / BT),)
   masks block  (BT, W)   VMEM
   adj          (n, W)    VMEM (whole matrix, every grid step)
   out block    (BT, n)   VMEM
+
+``batched_expand_stats`` is the fused exploration plane's kernel: the same
+degrees panel PLUS the per-task popcounts of the candidate mask and the
+partial solution, all in one VMEM pass over the packed words — the exact
+quantities a fused ``expand_tasks`` needs for bound / pivot / child-prune
+(degrees feed the argmax pivot; popcounts feed the bounds), so the hot path
+reads each task word once instead of once per bound.
 """
 
 from __future__ import annotations
 
 import functools
+import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 WORD_BITS = 32
+
+_INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
+
+
+def default_interpret() -> bool:
+    """True when the Pallas kernels should run in interpret mode.
+
+    Native Mosaic lowering only exists on TPU; everywhere else the kernels
+    run under the (slow, Python-level) interpreter, which is only good for
+    validation.  ``REPRO_PALLAS_INTERPRET=0|1`` forces either mode — e.g.
+    ``=1`` to debug a kernel on TPU, ``=0`` to assert a runtime really
+    lowers natively.  Every kernel entry point defaulting to
+    ``interpret=None`` resolves through here, so nothing silently pays the
+    interpreter on TPU.
+    """
+    env = os.environ.get(_INTERPRET_ENV, "").strip()
+    if env:  # empty/unset -> backend detection
+        return env.lower() not in ("0", "false", "no", "off")
+    return jax.default_backend() != "tpu"
+
+
+def kernels_native() -> bool:
+    """True when the Pallas kernels lower natively (worth using in hot
+    paths); the complement of :func:`default_interpret`."""
+    return not default_interpret()
 
 
 def _swar_popcount_u32(x: jnp.ndarray) -> jnp.ndarray:
@@ -57,19 +92,105 @@ def _degrees_kernel(masks_ref, adj_ref, out_ref, *, n: int, W: int):
     out_ref[...] = jnp.where(inside, deg, jnp.int32(-1))
 
 
+def _expand_stats_kernel(
+    masks_ref, sols_ref, adj_ref, deg_ref, pc_ref, *, n: int, W: int
+):
+    """Fused panel: degrees (BT, n) + [pc_mask, pc_sol] (BT, 2) per block."""
+    BT = masks_ref.shape[0]
+    masks = masks_ref[...]  # (BT, W) uint32
+    sols = sols_ref[...]  # (BT, W) uint32
+
+    def word_step(w, carry):
+        deg, pcm, pcs = carry
+        mw = masks[:, w]  # (BT,)
+        sw = sols[:, w]  # (BT,)
+        aw = adj_ref[:, w]  # (n,)
+        inter = mw[:, None] & aw[None, :]  # (BT, n)
+        # popcount accumulators stay 2-D (BT, 1): TPU vregs want a lane axis
+        return (
+            deg + _swar_popcount_u32(inter),
+            pcm + _swar_popcount_u32(mw[:, None]),
+            pcs + _swar_popcount_u32(sw[:, None]),
+        )
+
+    deg, pc_mask, pc_sol = jax.lax.fori_loop(
+        0,
+        W,
+        word_step,
+        (
+            jnp.zeros((BT, n), jnp.int32),
+            jnp.zeros((BT, 1), jnp.int32),
+            jnp.zeros((BT, 1), jnp.int32),
+        ),
+    )
+
+    # mask out vertices not in the task: bit v of masks word v//32
+    v = jax.lax.broadcasted_iota(jnp.int32, (BT, n), 1)
+    word_idx = v // WORD_BITS
+    bit_idx = (v % WORD_BITS).astype(jnp.uint32)
+    mask_words = jnp.take_along_axis(masks, word_idx.astype(jnp.int32), axis=1)
+    inside = ((mask_words >> bit_idx) & 1).astype(bool)
+    deg_ref[...] = jnp.where(inside, deg, jnp.int32(-1))
+    pc_ref[...] = jnp.concatenate([pc_mask, pc_sol], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_tasks", "interpret"))
+def batched_expand_stats(
+    adj: jnp.ndarray,
+    masks: jnp.ndarray,
+    sols: jnp.ndarray,
+    *,
+    block_tasks: int = 8,
+    interpret: Optional[bool] = None,
+):
+    """adj (n, W), masks/sols (T, W) uint32 -> (deg (T, n) int32,
+    pc (T, 2) int32) where pc[:, 0] = popcount(mask), pc[:, 1] =
+    popcount(sol) — the fused expand hot-path panel in one kernel pass.
+
+    ``interpret=None`` resolves via :func:`default_interpret` (native on
+    TPU, interpret elsewhere); an explicit bool pins the mode.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n, W = adj.shape
+    T = masks.shape[0]
+    BT = min(block_tasks, T)
+    grid = (pl.cdiv(T, BT),)
+    return pl.pallas_call(
+        functools.partial(_expand_stats_kernel, n=n, W=W),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BT, W), lambda i: (i, 0)),  # task masks block
+            pl.BlockSpec((BT, W), lambda i: (i, 0)),  # task sols block
+            pl.BlockSpec((n, W), lambda i: (0, 0)),  # whole adjacency
+        ],
+        out_specs=[
+            pl.BlockSpec((BT, n), lambda i: (i, 0)),
+            pl.BlockSpec((BT, 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, n), jnp.int32),
+            jax.ShapeDtypeStruct((T, 2), jnp.int32),
+        ],
+        interpret=interpret,
+    )(masks, sols, adj)
+
+
 @functools.partial(jax.jit, static_argnames=("block_tasks", "interpret"))
 def batched_degrees(
     adj: jnp.ndarray,
     masks: jnp.ndarray,
     *,
     block_tasks: int = 8,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """adj (n, W) uint32, masks (T, W) uint32 -> (T, n) int32 degrees.
 
-    ``interpret=True`` runs the kernel body in Python on CPU (validation);
-    on a TPU runtime pass ``interpret=False``.
+    ``interpret=None`` resolves via :func:`default_interpret` (native on
+    TPU, interpret elsewhere); an explicit bool pins the mode.
     """
+    if interpret is None:
+        interpret = default_interpret()
     n, W = adj.shape
     T = masks.shape[0]
     BT = min(block_tasks, T)

@@ -1,17 +1,30 @@
-"""Jit'd public wrapper for the bitset-degree kernel.
+"""Jit'd public wrappers for the bitset kernels, with backend-aware dispatch.
 
-``degrees_op`` dispatches to the Pallas kernel (interpret-mode on CPU, native
-on TPU) and falls back to the jnp oracle for shapes the kernel does not tile
-well (tiny T).  ``max_degree_vertex`` composes the branching-vertex argmax.
+``degrees_op`` / ``expand_stats_op`` dispatch to the Pallas kernels and fall
+back to the jnp oracle for shapes the kernel does not tile well (tiny T).
+
+Kernel mode is resolved ONCE per process by :func:`default_interpret`:
+**native** Mosaic lowering on a TPU runtime, **interpret** everywhere else —
+the Pallas interpreter is a correctness harness, not a fast path, so it is
+never chosen implicitly off-TPU for hot-path work (``degrees_auto`` /
+``expand_stats_auto`` below go straight to the jnp oracle there, which XLA
+fuses well on CPU/GPU).  The environment variable ``REPRO_PALLAS_INTERPRET``
+(``0``/``1``) overrides the detection for debugging either direction.
 """
 
 from __future__ import annotations
 
-import jax
+from typing import Optional
+
 import jax.numpy as jnp
 
-from repro.kernels.bitset_ops.kernel import batched_degrees
-from repro.kernels.bitset_ops.ref import batched_degrees_ref
+from repro.kernels.bitset_ops.kernel import (
+    batched_degrees,
+    batched_expand_stats,
+    default_interpret,
+    kernels_native,
+)
+from repro.kernels.bitset_ops.ref import batched_degrees_ref, expand_stats_ref
 
 
 def degrees_op(
@@ -20,14 +33,71 @@ def degrees_op(
     *,
     use_kernel: bool = True,
     block_tasks: int = 8,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """(n, W) adj × (T, W) masks -> (T, n) induced-subgraph degrees."""
+    """(n, W) adj × (T, W) masks -> (T, n) induced-subgraph degrees.
+
+    ``interpret=None`` resolves via :func:`default_interpret` (native on
+    TPU, interpret elsewhere); pass an explicit bool to pin a mode.
+    """
     if not use_kernel or masks.shape[0] < 2:
         return batched_degrees_ref(adj, masks)
+    if interpret is None:
+        interpret = default_interpret()
     return batched_degrees(
         adj, masks, block_tasks=block_tasks, interpret=interpret
     )
+
+
+def expand_stats_op(
+    adj: jnp.ndarray,
+    masks: jnp.ndarray,
+    sols: jnp.ndarray,
+    *,
+    use_kernel: bool = True,
+    block_tasks: int = 8,
+    interpret: Optional[bool] = None,
+):
+    """Fused expand panel: -> (deg (T, n) int32, pc_mask (T,), pc_sol (T,)).
+
+    One pass over the packed words yields the degrees panel plus both
+    per-task popcounts — everything a fused ``expand_tasks`` needs for
+    bound / pivot / child-prune.  Kernel-backed when worthwhile, jnp oracle
+    otherwise; results are bit-identical either way (tests assert it).
+    """
+    if not use_kernel or masks.shape[0] < 2:
+        return expand_stats_ref(adj, masks, sols)
+    if interpret is None:
+        interpret = default_interpret()
+    deg, pc = batched_expand_stats(
+        adj, masks, sols, block_tasks=block_tasks, interpret=interpret
+    )
+    return deg, pc[:, 0], pc[:, 1]
+
+
+# -- hot-path auto dispatch ----------------------------------------------------
+#
+# The fused exploration plane calls these from inside jitted supersteps; the
+# kernel is only a win when it lowers natively, so off-TPU they go straight
+# to the jnp oracle (bit-identical values, XLA-fused) instead of paying the
+# Pallas interpreter.
+
+
+def degrees_auto(adj: jnp.ndarray, masks: jnp.ndarray) -> jnp.ndarray:
+    """Batched degrees for the fused plane: native kernel on TPU, jnp
+    oracle elsewhere — same values bit-for-bit."""
+    if kernels_native() and masks.shape[0] >= 2:
+        return batched_degrees(adj, masks, interpret=False)
+    return batched_degrees_ref(adj, masks)
+
+
+def expand_stats_auto(adj: jnp.ndarray, masks: jnp.ndarray, sols: jnp.ndarray):
+    """Fused expand panel for the fused plane: native kernel on TPU, jnp
+    oracle elsewhere — same values bit-for-bit."""
+    if kernels_native() and masks.shape[0] >= 2:
+        deg, pc = batched_expand_stats(adj, masks, sols, interpret=False)
+        return deg, pc[:, 0], pc[:, 1]
+    return expand_stats_ref(adj, masks, sols)
 
 
 def max_degree_vertex(adj, masks, **kw):

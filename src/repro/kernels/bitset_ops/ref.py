@@ -31,3 +31,12 @@ def max_degree_vertex_ref(adj: jnp.ndarray, masks: jnp.ndarray):
     """-> (u (T,) int32, maxdeg (T,) int32): the branching vertex per task."""
     deg = batched_degrees_ref(adj, masks)
     return jnp.argmax(deg, axis=1).astype(jnp.int32), deg.max(axis=1)
+
+
+def expand_stats_ref(adj: jnp.ndarray, masks: jnp.ndarray, sols: jnp.ndarray):
+    """Oracle for the fused expand panel:
+    -> (deg (T, n) int32, pc_mask (T,) int32, pc_sol (T,) int32)."""
+    deg = batched_degrees_ref(adj, masks)
+    pc = jax.lax.population_count(masks).astype(jnp.int32).sum(axis=-1)
+    ps = jax.lax.population_count(sols).astype(jnp.int32).sum(axis=-1)
+    return deg, pc, ps

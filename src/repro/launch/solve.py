@@ -84,6 +84,7 @@ CONFIG_FLAGS = {
     "steps_per_round": "steps_per_round",
     "lanes": "lanes",
     "transfer": "transfer_impl",
+    "explore": "explore_impl",
     "donate_k": "donate_k",
     "chunk_rounds": "chunk_rounds",
     "use_mesh": "use_mesh",
@@ -145,6 +146,9 @@ def main():
     ap.add_argument("--lanes", type=int, default=S)
     ap.add_argument("--transfer", default=S, choices=["sparse", "gather"],
                     help="data-plane impl (sparse=masked psum, gather=all-gather)")
+    ap.add_argument("--explore", default=S, choices=["fused", "reference"],
+                    help="explore hot path (fused=one-pass expand + cheap "
+                         "pop, reference=per-task callables + top_k)")
     ap.add_argument("--donate-k", type=int, default=S,
                     help="max tasks a matched donor ships per round")
     ap.add_argument("--chunk-rounds", type=int, default=S,

@@ -80,6 +80,24 @@ class BranchStep(NamedTuple):
     terminal_value: jnp.ndarray  # () int32
 
 
+class ExpandResult(NamedTuple):
+    """One-pass batched expansion of L popped tasks (the fused hot path).
+
+    Everything :func:`~repro.core.superstep._explore_one_round` needs from a
+    task batch in one call: the pre-expansion bound (== ``task_bound`` per
+    lane), the batched :class:`BranchStep` (every field gains a leading lane
+    axis), and the two children's birth-time bounds (== ``child_bound`` on
+    the left/right child per lane).  Child bounds are only consumed for
+    non-terminal, non-pruned lanes, so a fused implementation may return
+    arbitrary values on lanes where ``step.is_terminal`` holds.
+    """
+
+    bound: jnp.ndarray  # (L,) int32 -- task_bound per lane
+    step: BranchStep  # batched: every field has a leading (L,) axis
+    left_bound: jnp.ndarray  # (L,) int32 -- child_bound of the left child
+    right_bound: jnp.ndarray  # (L,) int32 -- child_bound of the right child
+
+
 # -- packed-bitset primitives (problem-agnostic device ops) --------------------
 
 
@@ -132,6 +150,34 @@ def degrees(data: ProblemData, mask: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(in_mask(data, mask), deg, jnp.int32(-1))
 
 
+def degrees_batch(data: ProblemData, masks: jnp.ndarray) -> jnp.ndarray:
+    """(L, W) task masks -> (L, n) degrees, kernel-accelerated when native.
+
+    The fused ``expand_tasks`` implementations route their whole lane batch
+    through ONE degrees computation; on a TPU runtime this dispatches to the
+    Pallas ``bitset_ops`` kernel (native Mosaic), elsewhere it stays on the
+    identical jnp math (same values bit-for-bit — the kernel suite asserts
+    equality).  Imported lazily so the reference explore path never touches
+    :mod:`repro.kernels` (arch-guarded: CPU-only installs stay Pallas-free).
+    """
+    from repro.kernels.bitset_ops.ops import degrees_auto
+
+    return degrees_auto(data.adj, masks)
+
+
+def expand_stats_batch(data: ProblemData, masks: jnp.ndarray, sols: jnp.ndarray):
+    """(L, W) masks/sols -> (deg (L, n), pc_mask (L,), pc_sol (L,)).
+
+    The fused expand panel (degrees + both popcounts) in one pass; Pallas
+    ``batched_expand_stats`` when the runtime lowers it natively, identical
+    jnp math elsewhere.  Lazy import, same arch rule as
+    :func:`degrees_batch`.
+    """
+    from repro.kernels.bitset_ops.ops import expand_stats_auto
+
+    return expand_stats_auto(data.adj, masks, sols)
+
+
 def edge_count(deg: jnp.ndarray) -> jnp.ndarray:
     return jnp.maximum(deg, 0).sum() // 2
 
@@ -169,6 +215,15 @@ class BranchingProblem:
 
     # objective adapter (engine minimizes internal int32 values)
     bnb_bound: Callable[[Any], int]  # internal value worse than any solution
+
+    # optional fused hot path: (data, masks (L, W), sols (L, W)) ->
+    # ExpandResult computing bound + branch + child bounds in ONE pass over
+    # the lane batch (shared popcounts/degrees, batched kernels).  Must be
+    # bit-identical to the composed per-task callables on every lane the
+    # engine consumes; None -> the engine composes the three callables
+    # (:func:`compose_expand_tasks`), so third-party plugins need not
+    # provide one to run under ``explore_impl="fused"``.
+    expand_tasks: Optional[Callable[[ProblemData, Any, Any], ExpandResult]] = None
     external_value: Callable[[int], int] = staticmethod(lambda v: v)
     fpt_target: Callable[[int], int] = staticmethod(lambda k: k)
 
@@ -190,6 +245,39 @@ class BranchingProblem:
 
     # codec record layout (see repro.core.encoding)
     record_fields: tuple = RECORD_FIELDS
+
+
+def compose_expand_tasks(problem: BranchingProblem) -> Callable:
+    """The default batched expansion: the three per-task callables, vmapped.
+
+    This is exactly what the reference explore path computes per round —
+    ``task_bound`` on the popped batch, ``branch_once``, then ``child_bound``
+    on both children — packaged behind the :class:`ExpandResult` signature.
+    Problems without a hand-fused ``expand_tasks`` run on this under
+    ``explore_impl="fused"`` and are trivially bit-identical to the
+    reference path (property-tested in ``tests/test_explore_fused.py``).
+    """
+
+    def expand(data: ProblemData, masks, sols) -> ExpandResult:
+        bound = jax.vmap(lambda m, s: problem.task_bound(data, m, s))(masks, sols)
+        step = jax.vmap(lambda m, s: problem.branch_once(data, m, s))(masks, sols)
+        left = jax.vmap(lambda m, s: problem.child_bound(data, m, s))(
+            step.left_mask, step.left_sol
+        )
+        right = jax.vmap(lambda m, s: problem.child_bound(data, m, s))(
+            step.right_mask, step.right_sol
+        )
+        return ExpandResult(bound=bound, step=step, left_bound=left, right_bound=right)
+
+    return expand
+
+
+def resolve_expand(problem: BranchingProblem) -> Callable:
+    """The fused plane's batched expansion for ``problem``: its hand-fused
+    ``expand_tasks`` when it ships one, else the composed default."""
+    if problem.expand_tasks is not None:
+        return problem.expand_tasks
+    return compose_expand_tasks(problem)
 
 
 def require_host_bounds(problem: BranchingProblem) -> BranchingProblem:

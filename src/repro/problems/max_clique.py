@@ -14,14 +14,17 @@ back for reporting.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.problems import sequential
 from repro.problems.base import (
     BranchingProblem,
     BranchStep,
+    ExpandResult,
     ProblemData,
     degrees,
+    expand_stats_batch,
     popcount,
     single_bit,
 )
@@ -50,6 +53,48 @@ def bound(data: ProblemData, mask, sol) -> jnp.ndarray:
     return -(popcount(sol) + popcount(mask))
 
 
+def expand_tasks(data: ProblemData, masks, sols) -> ExpandResult:
+    """One-pass fused expansion of an (L, W) lane batch.
+
+    The per-task path reads every packed word five times (task_bound's two
+    popcounts, branch_once's degrees + two popcounts, child_bound's four);
+    here ONE ``expand_stats_batch`` panel (Pallas kernel on TPU) yields
+    degrees + |P| + |R| for the whole batch, and the child bounds become
+    arithmetic on known quantities instead of fresh popcounts:
+
+    * ``|left_sol| = |R| + 1`` — the pivot u is a candidate (u ∈ P, P∩R=∅);
+    * ``|left_mask| = |N(u)∩P| = deg[u]`` — degrees already computed it;
+    * ``|right_mask| = |P| - 1``, ``|right_sol| = |R|``.
+
+    On terminal lanes (P empty) the pivot is arbitrary, so the child bounds
+    are not the composed values there — the engine never consumes child
+    bounds of terminal lanes (see :class:`ExpandResult`); every consumed
+    quantity is bit-identical to the composed path (property-tested).
+    """
+    W = data.adj.shape[1]
+    deg, pc_mask, pc_sol = expand_stats_batch(data, masks, sols)  # (L,n),(L,),(L,)
+    task_bound_v = -(pc_sol + pc_mask)
+    u = jnp.argmax(deg, axis=1).astype(jnp.int32)  # (L,)
+    deg_u = deg.max(axis=1)  # == deg[u] (the argmax row max), one reduce
+    u_bit = jax.vmap(lambda v: single_bit(v, W))(u)  # (L, W)
+    nb = data.adj[u] & masks  # (L, W)
+    step = BranchStep(
+        left_mask=nb,
+        left_sol=sols | u_bit,
+        right_mask=masks & ~u_bit,
+        right_sol=sols,
+        is_terminal=pc_mask == 0,
+        terminal_sol=sols,
+        terminal_value=-pc_sol,
+    )
+    return ExpandResult(
+        bound=task_bound_v,
+        step=step,
+        left_bound=-(pc_sol + 1 + deg_u),
+        right_bound=-(pc_sol + pc_mask - 1),
+    )
+
+
 def host_bound(g, mask, sol_mask) -> int:
     """Host twin of :func:`bound`: -(|R| + |P|) over packed host bitsets."""
     from repro.graphs.bitgraph import popcount_rows
@@ -69,6 +114,7 @@ SPEC = BranchingProblem(
     branch_once=branch_once,
     task_bound=bound,
     child_bound=bound,
+    expand_tasks=expand_tasks,
     bnb_bound=lambda g: 1,  # just worse than the empty clique (value 0)
     external_value=lambda v: -v,
     fpt_target=lambda k: -k,

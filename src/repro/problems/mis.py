@@ -24,6 +24,7 @@ SPEC = BranchingProblem(
     branch_once=max_clique.branch_once,
     task_bound=max_clique.bound,
     child_bound=max_clique.bound,
+    expand_tasks=max_clique.expand_tasks,  # fused hot path rides along too
     bnb_bound=lambda g: 1,  # just worse than the empty set (value 0)
     external_value=lambda v: -v,
     fpt_target=lambda k: -k,

@@ -32,8 +32,10 @@ from repro.problems.base import (  # noqa: F401  (re-exported public API)
     WORD_BITS,
     BranchingProblem,
     BranchStep,
+    ExpandResult,
     ProblemData,
     degrees,
+    degrees_batch,
     edge_count,
     in_mask,
     pack_bits,
@@ -168,6 +170,50 @@ def task_bound(problem: ProblemData, mask, sol_mask) -> jnp.ndarray:
     return popcount(sol_mask) + lower_bound(degrees(problem, mask))
 
 
+def expand_tasks(problem: ProblemData, masks, sols) -> ExpandResult:
+    """One-pass fused expansion of an (L, W) lane batch (Alg. 8 hot path).
+
+    The per-task path computes two full degree panels per lane (task_bound
+    on the raw mask, branch_once on the reduced mask) through separate
+    vmapped calls, then popcounts both children's covers from scratch.
+    Here each panel is ONE batched ``degrees_batch`` over all lanes (the
+    Pallas kernel on TPU), the pivot and bound read the same panel, and the
+    child bounds are arithmetic on it — ``|S|+1`` for the take-u child and
+    ``|S| + deg[u]`` for the take-N(u) child (u and its neighbours live in
+    the reduced mask, disjoint from the cover, so the popcounts are exact).
+    Terminal lanes carry placeholder child bounds (never consumed — see
+    :class:`ExpandResult`); all consumed values are bit-identical to the
+    composed per-task callables (property-tested).
+    """
+    W = problem.adj.shape[1]
+    deg0 = degrees_batch(problem, masks)  # (L, n)
+    bound = popcount(sols) + jax.vmap(lower_bound)(deg0)  # (L,)
+    rmasks, rsols = jax.vmap(
+        lambda m, s: reduce_instance(problem, m, s)
+    )(masks, sols)
+    deg = degrees_batch(problem, rmasks)  # (L, n)
+    maxdeg = deg.max(axis=1)  # also == deg[u], so it feeds the right bound
+    u = jnp.argmax(deg, axis=1).astype(jnp.int32)
+    u_bit = jax.vmap(lambda v: single_bit(v, W))(u)
+    nb = problem.adj[u] & rmasks
+    pc_rsol = popcount(rsols)  # (L,)
+    step = BranchStep(
+        left_mask=rmasks & ~u_bit,
+        left_sol=rsols | u_bit,
+        right_mask=rmasks & ~(nb | u_bit),
+        right_sol=rsols | nb,
+        is_terminal=maxdeg <= 0,
+        terminal_sol=rsols,
+        terminal_value=pc_rsol,
+    )
+    return ExpandResult(
+        bound=bound,
+        step=step,
+        left_bound=pc_rsol + 1,
+        right_bound=pc_rsol + maxdeg,
+    )
+
+
 def child_bound(problem: ProblemData, mask, sol_mask) -> jnp.ndarray:
     """Cheap birth-time bound: the partial cover can only grow."""
     return popcount(sol_mask)
@@ -203,6 +249,7 @@ SPEC = BranchingProblem(
     branch_once=branch_once,
     task_bound=task_bound,
     child_bound=child_bound,
+    expand_tasks=expand_tasks,
     bnb_bound=lambda g: g.n + 1,
     branch_once_host=sequential.branch_once,
     sequential=sequential.solve_sequential,

@@ -14,7 +14,9 @@ independent of the device plane.
 import ast
 import pathlib
 
-CORE = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro" / "core"
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+CORE = SRC / "core"
+PROBLEMS = SRC / "problems"
 
 # concrete problem plugins core must never import
 FORBIDDEN = {
@@ -49,6 +51,61 @@ def test_core_never_imports_a_concrete_problem():
     assert not offenders, (
         f"core modules import concrete problem plugins: {offenders} — "
         f"route through repro.problems.registry / repro.problems.base instead"
+    )
+
+
+def _module_level_imports_of(path: pathlib.Path):
+    """Every import executed AT IMPORT TIME: the module body plus any
+    statement block reachable from it (if/try/with/for/while, class bodies)
+    — only function bodies are excluded, because only those defer execution.
+    Relative imports are resolved against the file's package so ``from
+    ..kernels import x`` is caught like its absolute spelling."""
+    tree = ast.parse(path.read_text())
+    # package of this module, e.g. src/repro/problems/base.py -> repro.problems
+    parts = path.with_suffix("").parts
+    pkg = list(parts[parts.index("repro"):-1] or ["repro"])
+
+    def walk(nodes):
+        for node in nodes:
+            if isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+            ):
+                continue  # deferred execution: lazy imports live here
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    yield alias.name
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:  # relative: resolve against the package
+                    base = pkg[: len(pkg) - (node.level - 1)]
+                    yield ".".join(base + ([node.module] if node.module else []))
+                elif node.module:
+                    yield node.module
+            else:
+                for child in ast.iter_child_nodes(node):
+                    yield from walk([child])
+
+    yield from walk(tree.body)
+
+
+def test_reference_explore_path_never_imports_kernels_at_module_level():
+    """The reference explore path must stay Pallas-free: importing
+    ``repro.core`` / ``repro.problems`` (what every CPU-only solve touches)
+    may not pull in ``repro.kernels`` — the fused impls reach the bitset
+    kernels through function-level lazy imports only, so they load only if
+    a fused plane actually runs."""
+    offenders = {}
+    for directory in (CORE, PROBLEMS):
+        for path in sorted(directory.glob("*.py")):
+            bad = [
+                mod
+                for mod in _module_level_imports_of(path)
+                if mod == "repro.kernels" or mod.startswith("repro.kernels.")
+            ]
+            if bad:
+                offenders[path.name] = bad
+    assert not offenders, (
+        f"module-level repro.kernels imports in the solve plane: {offenders}"
+        f" — keep kernel imports lazy (inside the fused expand functions)"
     )
 
 
@@ -103,3 +160,53 @@ def test_backend_registry_covers_the_advertised_backends():
     assert known_backends() == [
         "centralized", "protocol_sim", "sequential", "spmd"
     ]
+
+
+# Field snapshot of the one public config: adding/removing/renaming a knob is
+# a deliberate, reviewed change (update here AND the README perf-knobs
+# section), never a refactor side effect.  Defaults are pinned for the knobs
+# whose silent flip would change what every solve runs (hot-path selection).
+SOLVE_CONFIG_FIELDS = [
+    "batch_size",
+    "capacity",
+    "chunk_rounds",
+    "codec",
+    "compact_threshold",
+    "donate_k",
+    "explore_impl",
+    "k",
+    "lanes",
+    "latency",
+    "max_rounds",
+    "max_ticks",
+    "mode",
+    "num_workers",
+    "packed_status",
+    "policy",
+    "queue_cap_per_p",
+    "seed",
+    "send_metadata",
+    "skip_empty_transfer",
+    "steps_per_round",
+    "transfer_impl",
+    "use_mesh",
+    "use_priority_queue",
+]
+
+
+def test_solve_config_field_snapshot():
+    import dataclasses
+
+    from repro.api import SolveConfig
+
+    assert sorted(
+        f.name for f in dataclasses.fields(SolveConfig)
+    ) == SOLVE_CONFIG_FIELDS, (
+        "SolveConfig fields drifted from the pinned snapshot — if "
+        "intentional, update tests/test_arch_guard.py and the README"
+    )
+    cfg = SolveConfig()
+    # the fused exploration plane is the default hot path; the reference
+    # path stays reachable for A/B
+    assert cfg.explore_impl == "fused"
+    assert cfg.transfer_impl == "sparse"

@@ -58,6 +58,41 @@ def test_overflow_flag():
     assert int(f.pending()) == 2  # dropped, not corrupted
 
 
+def test_overflow_counts_every_dropped_push():
+    """Saturation is never silent: ``dropped`` counts the exact number of
+    lost tasks, cumulatively across pushes."""
+    f = make_frontier(3, W)
+    f = _push(f, [1, 2])
+    assert int(f.dropped) == 0
+    f = _push(f, [5, 6, 7])  # one slot free -> two dropped
+    assert int(f.dropped) == 2 and bool(f.overflow)
+    f = _push(f, [8])  # full -> one more dropped
+    assert int(f.dropped) == 3
+    assert int(f.pending()) == 3
+    # the survivors are the FIRST valid pushes in order (5 took the slot)
+    _, _, _, depths, valid = pop_deepest(f, 3)
+    assert valid.all()
+    assert sorted(np.asarray(depths).tolist()) == [1, 2, 5]
+
+
+def test_push_pop_at_exact_capacity():
+    """Behavior AT capacity is well-defined: a full frontier accepts zero
+    pushes (counted), popping frees slots, and the freed slots take new
+    pushes without disturbing survivors."""
+    f = make_frontier(2, W)
+    f = _push(f, [4, 9])
+    assert int(f.pending()) == 2  # full
+    f = _push(f, [7])
+    assert int(f.dropped) == 1  # rejected at capacity
+    f, _, _, d, v = pop_deepest(f, 1)
+    assert bool(v.all()) and int(d[0]) == 9
+    f = _push(f, [7])  # freed slot accepts again, nothing further dropped
+    assert int(f.dropped) == 1 and int(f.pending()) == 2
+    _, _, _, depths, valid = pop_deepest(f, 2)
+    assert valid.all()
+    assert sorted(np.asarray(depths).tolist()) == [4, 7]
+
+
 @settings(max_examples=50, deadline=None)
 @given(
     st.lists(

@@ -137,6 +137,7 @@ def _hand_built_batch(masks_spec, P=4, cap=8, W=1, n=16):
             depths=jnp.asarray(depths),
             active=jnp.asarray(active),
             overflow=jnp.zeros((B, P), bool),
+            dropped=jnp.zeros((B, P), jnp.int32),
         ),
         best_val=jnp.full((B, P), 99, jnp.int32),
         local_best_val=jnp.full((B, P), 99, jnp.int32),
