@@ -1,12 +1,17 @@
 """Render the §Roofline table from dry-run JSON results.
 
-Usage: PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun_single.json
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun_single.json
+  PYTHONPATH=src python -m benchmarks.roofline_report in.json --md --out report.md
+
+``--out`` writes the rendered table (CI uploads it as the roofline
+artifact next to the dry-run JSON); ``--md`` renders a markdown table.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
-import sys
 
 
 def fmt_s(x):
@@ -60,5 +65,21 @@ def render(path: str, md: bool = False):
     return "\n".join(lines)
 
 
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="benchmarks.roofline_report")
+    ap.add_argument(
+        "results", nargs="?", default="results/dryrun_single.json",
+        help="dry-run JSON (repro.launch.dryrun output)",
+    )
+    ap.add_argument("--md", action="store_true", help="markdown table")
+    ap.add_argument("--out", default=None, help="also write the table here")
+    args = ap.parse_args(argv)
+    table = render(args.results, md=args.md)
+    print(table)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(table + "\n")
+
+
 if __name__ == "__main__":
-    print(render(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_single.json"))
+    main()

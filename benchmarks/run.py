@@ -8,6 +8,7 @@
   clique_smoke      max-clique on the generic plane vs sequential reference
   session_warm      cold-vs-warm SolverSession (compiled-plane cache gate)
   explore_throughput fused vs reference exploration plane, nodes/sec (gated)
+  serve_load        continuous-admission service vs fixed batching (gated)
   balancer_bench    beyond-paper serving balancer
   kernel_bench      kernel arithmetic-intensity table
 
@@ -36,6 +37,7 @@ from benchmarks import (
     explore_throughput,
     kernel_bench,
     protocol_stats,
+    serve_load,
     session_warm,
     speedup,
 )
@@ -48,6 +50,7 @@ ALL = {
     "clique_smoke": clique_smoke,
     "session_warm": session_warm,
     "explore_throughput": explore_throughput,
+    "serve_load": serve_load,
     "balancer_bench": balancer_bench,
     "kernel_bench": kernel_bench,
     "speedup": speedup,
@@ -56,7 +59,7 @@ ALL = {
 # kept fast enough for a per-PR CI job; full runs remain opt-in by name
 SMOKE_DEFAULT = (
     "encoding_bytes", "batch_throughput", "clique_smoke", "session_warm",
-    "explore_throughput",
+    "explore_throughput", "serve_load",
 )
 
 SMOKE_JSON = "BENCH_smoke.json"

@@ -29,9 +29,11 @@ from repro.api.backends import (
 from repro.api.cache import CacheStats, PlaneCache
 from repro.api.config import SolveConfig
 from repro.api.result import BatchSolveResult, SolveResult
+from repro.api.service import AsyncSolveService, SolveService
 from repro.api.session import SolverSession, solve_stream_session
 
 __all__ = [
+    "AsyncSolveService",
     "Backend",
     "BACKENDS",
     "BatchSolveResult",
@@ -39,6 +41,7 @@ __all__ = [
     "PlaneCache",
     "SolveConfig",
     "SolveResult",
+    "SolveService",
     "SolverSession",
     "get_backend",
     "known_backends",

@@ -149,7 +149,14 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
     RESLICES and keeps calling the same parametric plane function instead of
     rebuilding an executable, so a compacted width that was seen before
     (this call or any earlier one) is already warm.
+
+    The loop runs on the :class:`~repro.core.superstep.LaneState` lifecycle
+    (``tag`` = original instance index, per-lane ``rounds`` accumulated on
+    device) — the same per-lane machinery the continuous service drives —
+    and reports plane occupancy in ``BatchResult.lane_stats``.
     """
+    from repro.core.superstep import LaneState, slice_lanes, step_lanes
+
     if cfg.use_mesh:
         raise ValueError(
             "solve_many has no mesh path yet (vmap virtual workers only); "
@@ -168,6 +175,7 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
     bucket_record = []
     compactions = 0
     wall_total = 0.0
+    lane_stats = {"chunk_calls": 0, "lane_chunks": 0, "live_lane_chunks": 0}
 
     buckets = _engine._bucket_instances(graphs, by_n=(cfg.codec == "basic"))
     for (W, _), idxs in sorted(buckets.items()):
@@ -183,8 +191,13 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
         ]
 
         datas = problems_base.make_batch_data(spec, bucket_graphs, n_max, W)
-        state = _engine._make_batch_state(
-            spec, bucket_graphs, cfg.num_workers, cap, W, initial_bests
+        lanes = LaneState(
+            worker=_engine._make_batch_state(
+                spec, bucket_graphs, cfg.num_workers, cap, W, initial_bests
+            ),
+            done=jnp.zeros((len(idxs),), bool),
+            tag=np.asarray(idxs, np.int32),
+            rounds=jnp.zeros((len(idxs),), jnp.int32),
         )
         fpt_bounds = (
             jnp.asarray(np.array([spec.fpt_target(ks[i]) for i in idxs], np.int32))
@@ -200,26 +213,22 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
                 (n_max, W, cap, cfg.num_workers, n_lanes),
             )
 
-        def chunk(state, done, bounds):
-            if use_fpt:
-                return plane(datas, state, done, bounds)
-            return plane(datas, state, done)
-
         note(len(idxs))
-        lanes_orig = np.array(idxs)  # lane -> original instance index
-        done = jnp.zeros((len(idxs),), bool)
-        rounds_done = np.zeros(B, np.int64)
+        live_h = np.ones(len(idxs), bool)  # live entering the next chunk
         total_ran = 0
         while total_ran < cfg.max_rounds:
-            state, done, delta, ran = chunk(state, done, fpt_bounds)
-            done_h, delta_h, ran_h = jax.device_get((done, delta, ran))
-            rounds_done[lanes_orig] += np.asarray(delta_h)
+            lane_stats["chunk_calls"] += 1
+            lane_stats["lane_chunks"] += lanes.num_lanes
+            lane_stats["live_lane_chunks"] += int(live_h.sum())
+            lanes, ran = step_lanes(plane, datas, lanes, fpt_bounds)
+            done_h, ran_h = jax.device_get((lanes.done, ran))
             total_ran += int(ran_h)
             done_h = np.asarray(done_h)
+            live_h = ~done_h
             if done_h.all():
                 break
-            n_live = int((~done_h).sum())
-            n_lanes = len(lanes_orig)
+            n_live = int(live_h.sum())
+            n_lanes = lanes.num_lanes
             target = _engine._pow2_at_least(n_live)
             if (
                 cfg.compact_threshold > 0
@@ -229,28 +238,29 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
                 # collect finished lanes now, keep live ones (plus frozen
                 # finished fillers up to the pow2 target), reslice every
                 # tensor — the SAME plane function serves the new width.
-                host = _engine._fetch_batch_state(state)
+                host = _engine._fetch_batch_state(lanes.worker)
+                rounds_h = np.asarray(jax.device_get(lanes.rounds))
                 live = np.flatnonzero(~done_h)
                 fillers = np.flatnonzero(done_h)[: target - n_live]
                 for lane in np.flatnonzero(done_h):
-                    oi = int(lanes_orig[lane])
+                    oi = int(lanes.tag[lane])
                     if oi not in results and lane not in fillers:
-                        results[oi] = (lane, host, int(rounds_done[oi]))
+                        results[oi] = (lane, host, int(rounds_h[lane]))
                 sel = np.concatenate([live, fillers]).astype(np.int64)
-                state = jax.tree.map(lambda x: x[sel], state)
+                lanes = slice_lanes(lanes, sel)
                 datas = problems_base.slice_instances(datas, sel)
                 if fpt_bounds is not None:
                     fpt_bounds = fpt_bounds[sel]
-                done = jnp.asarray(done_h[sel])
-                lanes_orig = lanes_orig[sel]
+                live_h = live_h[sel]
                 compactions += 1
-                note(len(lanes_orig))
+                note(lanes.num_lanes)
 
-        host = _engine._fetch_batch_state(state)
-        for lane, oi in enumerate(lanes_orig):
-            oi = int(oi)
+        host = _engine._fetch_batch_state(lanes.worker)
+        rounds_h = np.asarray(jax.device_get(lanes.rounds))
+        for lane in range(lanes.num_lanes):
+            oi = int(lanes.tag[lane])
             if oi not in results:
-                results[oi] = (lane, host, int(rounds_done[oi]))
+                results[oi] = (lane, host, int(rounds_h[lane]))
         bucket_wall = time.perf_counter() - t0
         wall_total += bucket_wall
         per_wall = bucket_wall / max(len(idxs), 1)
@@ -269,11 +279,17 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
                 packed_status=cfg.packed_status,
             )
 
+    lane_stats["occupancy"] = (
+        lane_stats["live_lane_chunks"] / lane_stats["lane_chunks"]
+        if lane_stats["lane_chunks"]
+        else 0.0
+    )
     return _engine.BatchResult(
         results=[results[i] for i in range(B)],
         wall_s=wall_total,
         buckets=bucket_record,
         compactions=compactions,
+        lane_stats=lane_stats,
     )
 
 
@@ -336,6 +352,7 @@ class SpmdBackend(Backend):
             wall_s=br.wall_s,
             buckets=br.buckets,
             compactions=br.compactions,
+            lane_stats=br.lane_stats,
         )
 
 

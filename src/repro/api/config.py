@@ -26,6 +26,7 @@ from typing import Optional, Union
 
 _MODES = ("bnb", "fpt")
 _POLICIES = ("priority", "random")
+_ADMISSIONS = ("fifo", "priority")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +64,14 @@ class SolveConfig:
     use_mesh: bool = False
     # -- session admission (submit()/flush() via serving.SolveBatcher) --------
     batch_size: int = 8
+    # -- continuous-batching service (SolverSession.serve / SolveService) -----
+    # lanes per live plane: freed lanes re-admit queued instances in place
+    service_lanes: int = 8
+    # queue order: "fifo" = strict submission order; "priority" = by the
+    # request's (priority desc, deadline asc, submit seq) key
+    admission: str = "priority"
+    # per-tenant cap on simultaneously occupied lanes (None = no fairness cap)
+    tenant_max_lanes: Optional[int] = None
     # -- discrete-event simulator backends ------------------------------------
     latency: int = 1
     seed: int = 0
@@ -87,6 +96,7 @@ class SolveConfig:
 
         choice("mode", self.mode, _MODES)
         choice("policy", self.policy, _POLICIES)
+        choice("admission", self.admission, _ADMISSIONS)
         # impl names live with the engine (one source of truth — the config
         # can never accept a value the superstep rejects, or vice versa);
         # codec names live in the encoding registry.  Same fail-helpfully
@@ -100,8 +110,8 @@ class SolveConfig:
         make_codec(self.codec, 1)
         for name in (
             "num_workers", "steps_per_round", "lanes", "donate_k",
-            "chunk_rounds", "max_rounds", "batch_size", "max_ticks",
-            "queue_cap_per_p",
+            "chunk_rounds", "max_rounds", "batch_size", "service_lanes",
+            "max_ticks", "queue_cap_per_p",
         ):
             v = getattr(self, name)
             if not isinstance(v, int) or isinstance(v, bool) or v < 1:
@@ -110,6 +120,10 @@ class SolveConfig:
             raise ValueError(f"SolveConfig.latency must be >= 1, got {self.latency!r}")
         if self.capacity is not None and self.capacity < 1:
             raise ValueError(f"SolveConfig.capacity must be None or >= 1")
+        if self.tenant_max_lanes is not None and self.tenant_max_lanes < 1:
+            raise ValueError(
+                "SolveConfig.tenant_max_lanes must be None or >= 1"
+            )
         if not 0 <= self.compact_threshold <= 1:
             raise ValueError(
                 f"SolveConfig.compact_threshold must be in [0, 1], "

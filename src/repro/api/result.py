@@ -56,6 +56,12 @@ class BatchSolveResult:
     ``buckets`` is the packing record — one ``(W, n_max, [indices])`` triple
     per compiled bucket (empty for backends that solve instance-by-
     instance); ``compactions`` counts host-side batch compactions.
+
+    ``lane_stats`` reports plane occupancy: ``chunk_calls`` (compiled chunk
+    dispatches), ``lane_chunks`` (chunk_calls × plane width — paid lane
+    slots), ``live_lane_chunks`` (slots that held an unfinished instance)
+    and their ratio ``occupancy`` — the utilization a continuous-admission
+    service raises over fixed batching (empty where not tracked).
     """
 
     problem: str
@@ -64,6 +70,7 @@ class BatchSolveResult:
     wall_s: float
     buckets: list = dataclasses.field(default_factory=list)
     compactions: int = 0
+    lane_stats: dict = dataclasses.field(default_factory=dict)
 
     def __len__(self) -> int:
         return len(self.results)

@@ -1,0 +1,520 @@
+"""``SolveService``: the continuous-batching solve front end.
+
+The batched plane used to run batch-at-a-time: admit B instances, run the
+compiled chunk loop to completion (compacting the stragglers), return all
+B results.  Easy instances finish their lanes early, and those lanes sit
+frozen — paid for every chunk — until the whole batch drains.  This module
+refactors that into a *live lane lifecycle*, the branching-solver analogue
+of an inference server's continuous batching:
+
+* each ``(problem, plane shape)`` gets ONE long-lived compiled plane with
+  ``config.service_lanes`` lanes, built from the parametric
+  :func:`~repro.core.superstep.build_batch_plane_fn` (instance tensors are
+  call-time arguments);
+* ``submit(g)`` queues a request and returns a ticket; a
+  :class:`LaneScheduler` admits queued requests into *vacant* lanes —
+  swap-in is pure data (:func:`~repro.problems.base.write_instance` +
+  :func:`~repro.core.engine.make_instance_state`), so admission into a
+  freed lane triggers **zero new traces**;
+* each :meth:`SolveService.step` runs one compiled chunk per live plane,
+  retires lanes whose instance finished (streaming the result out while
+  the other lanes keep solving), and re-admits into the freed lanes.
+
+Because finished/vacant lanes are frozen by the plane's per-superstep
+select, every admitted instance's trajectory — branching decisions AND
+counters — is bit-identical to its solo ``solve`` (the shared goldens
+assert this, including the basic codec's byte accounting, which is why
+basic-codec planes key on exact ``(W, n)`` while the optimized codec keys
+on ``W`` alone with full-width ``n_max = 32·W`` padding).
+
+Scheduling is deterministic: admission order is a pure function of submit
+order and completion order (``fifo``), or of the request's
+``(priority desc, deadline asc, submit seq)`` key (``priority``), with an
+optional per-tenant cap on simultaneously occupied lanes.  ``deadline`` is
+a *superstep budget* (the anytime-algorithm deadline of Avis & Devroye),
+checked at chunk boundaries: a lane over budget is evicted with its
+best-so-far anytime result and ``stats["service"]["deadline_hit"]=True``.
+
+:class:`AsyncSolveService` wraps a service in an asyncio pump for the
+``launch.serve`` front end: ``await svc.solve(g)`` resolves when the
+instance's lane retires.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.cache import PlaneCache
+from repro.api.config import SolveConfig
+from repro.api.result import SolveResult, from_engine_result
+from repro.core import engine as _engine
+from repro.core.encoding import make_codec
+from repro.core.superstep import (
+    lane_retire,
+    lane_swap_in,
+    make_vacant_lanes,
+    step_lanes,
+)
+from repro.problems import base as problems_base
+from repro.problems.registry import get_problem
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    """One queued instance: the graph plus its scheduling attributes."""
+
+    ticket: int
+    g: object
+    priority: int = 0
+    deadline: Optional[int] = None  # superstep budget (anytime eviction)
+    tenant: Optional[str] = None
+    k: Optional[int] = None  # fpt decision target (fpt mode only)
+    submit_s: float = 0.0
+
+
+class LaneScheduler:
+    """Deterministic admission queue over :class:`SolveRequest`.
+
+    ``fifo`` admits in strict submit order; ``priority`` by
+    ``(-priority, deadline, seq)`` (unset deadlines sort last).  Admission
+    decisions never read the wall clock, so a replayed submit/completion
+    sequence admits identically.  ``tenant_max_lanes`` callers pass the
+    current per-tenant lane occupancy and requests whose tenant is at the
+    cap are skipped (they stay queued, later requests may overtake — that
+    is the fairness, not a bug).
+    """
+
+    def __init__(
+        self, admission: str = "priority", tenant_max_lanes: Optional[int] = None
+    ):
+        self.admission = admission
+        self.tenant_max_lanes = tenant_max_lanes
+        self._queue: list = []
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def push(self, req: SolveRequest) -> None:
+        self._queue.append(req)
+
+    def ordered(self) -> list:
+        """The queue in admission order (a copy; callers iterate and
+        :meth:`remove` what they admit)."""
+        if self.admission == "fifo":
+            return sorted(self._queue, key=lambda r: r.ticket)
+        big = float("inf")
+        return sorted(
+            self._queue,
+            key=lambda r: (
+                -r.priority,
+                r.deadline if r.deadline is not None else big,
+                r.ticket,
+            ),
+        )
+
+    def remove(self, req: SolveRequest) -> None:
+        self._queue.remove(req)
+
+    def tenant_blocked(self, req: SolveRequest, tenant_occupied: dict) -> bool:
+        if self.tenant_max_lanes is None or req.tenant is None:
+            return False
+        return tenant_occupied.get(req.tenant, 0) >= self.tenant_max_lanes
+
+
+class _LivePlane:
+    """One long-lived compiled plane: ``service_lanes`` lanes over a fixed
+    ``(n_max, W, capacity)`` packing, plus the host bookkeeping (which
+    ticket occupies which lane, when it was admitted, its round budget)."""
+
+    def __init__(self, spec, cfg: SolveConfig, cache: PlaneCache, key: tuple):
+        W, n_exact = key
+        self.key = key
+        self.W = W
+        # optimized codec: full-width pad (any n <= 32·W admits, padding
+        # rows are isolated never-in-mask vertices — padding invariance);
+        # basic codec: exact n (its §4.3 payload pad is n·W words, so the
+        # per-instance byte accounting must see the solo n).
+        self.n_max = n_exact if n_exact is not None else problems_base.WORD_BITS * W
+        self.cap = cfg.capacity or (4 * self.n_max + 8 * cfg.lanes)
+        self.pad = make_codec(cfg.codec, self.n_max, problem=spec).pad_words
+        self.use_fpt = cfg.mode == "fpt"
+        B = cfg.service_lanes
+        self.lanes = make_vacant_lanes(B, cfg.num_workers, self.cap, W)
+        self.datas = problems_base.make_blank_batch_data(B, self.n_max, W)
+        self.fpt_bounds = jnp.zeros((B,), jnp.int32) if self.use_fpt else None
+        self.plane = cache.batch_plane(spec, cfg, self.pad, self.use_fpt)
+        # host-side per-lane occupancy records (None = vacant)
+        self.requests: list = [None] * B
+        self.admit_s: list = [0.0] * B
+
+    def occupied_count(self) -> int:
+        return int(self.lanes.occupied().sum())
+
+    def vacant_lane(self) -> Optional[int]:
+        free = np.flatnonzero(~self.lanes.occupied())
+        return int(free[0]) if free.size else None
+
+
+class SolveService:
+    """The continuous-batching service over one (problem, backend config).
+
+    >>> svc = SolveService(problem="max_clique",
+    ...                    config=SolveConfig(service_lanes=4))
+    >>> t = svc.submit(g, priority=1)
+    >>> done = svc.drain()          # or step() incrementally
+    >>> svc.result(t).best_size     # pops; KeyError if not finished
+
+    Only the SPMD engine has a live batched plane, so the service is
+    spmd-only by construction (other backends solve instance-at-a-time —
+    use :class:`~repro.api.session.SolverSession` directly).
+    """
+
+    def __init__(
+        self,
+        problem,
+        config: Optional[SolveConfig] = None,
+        *,
+        cache: Optional[PlaneCache] = None,
+    ):
+        self.spec = get_problem(problem)
+        self.config = config if config is not None else SolveConfig()
+        if self.config.use_mesh:
+            raise ValueError(
+                "SolveService runs on the vmap virtual-worker plane; "
+                "use_mesh configs are not servable yet"
+            )
+        self.cache = cache if cache is not None else PlaneCache()
+        self.scheduler = LaneScheduler(
+            self.config.admission, self.config.tenant_max_lanes
+        )
+        self._planes: dict = {}  # (W, n_exact|None) -> _LivePlane
+        self._results: dict = {}  # ticket -> SolveResult
+        self._next_ticket = 0
+        self._t0 = time.perf_counter()
+        self._stats = {
+            "submitted": 0,
+            "completed": 0,
+            "evicted": 0,
+            "steps": 0,
+            "chunk_calls": 0,
+            "lane_chunks": 0,
+            "live_lane_chunks": 0,
+            "wait_s_total": 0.0,
+            "residency_s_total": 0.0,
+        }
+
+    # -- submission ------------------------------------------------------------
+
+    def submit(
+        self,
+        g,
+        *,
+        priority: int = 0,
+        deadline: Optional[int] = None,
+        tenant: Optional[str] = None,
+        k: Optional[int] = None,
+    ) -> int:
+        """Queue one instance; returns its ticket immediately.
+
+        ``deadline`` is a superstep budget (anytime eviction at chunk
+        granularity), NOT wall time; ``k`` overrides the config's fpt
+        target for this request (fpt mode only).
+        """
+        if k is not None and self.config.mode != "fpt":
+            raise ValueError("per-request k needs mode='fpt'")
+        if deadline is not None and deadline < 1:
+            raise ValueError(f"deadline must be a superstep budget >= 1, got {deadline}")
+        if self.config.mode == "fpt" and k is None:
+            k = self.config.solo_k()
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self.scheduler.push(
+            SolveRequest(
+                ticket=ticket,
+                g=g,
+                priority=priority,
+                deadline=deadline,
+                tenant=tenant,
+                k=k,
+                submit_s=time.perf_counter() - self._t0,
+            )
+        )
+        self._stats["submitted"] += 1
+        return ticket
+
+    # -- the service loop ------------------------------------------------------
+
+    def step(self) -> list:
+        """Admit into vacant lanes, run ONE compiled chunk per live plane,
+        retire finished lanes; returns the tickets completed this step."""
+        self._stats["steps"] += 1
+        self._admit()
+        completed = []
+        for plane in self._planes.values():
+            if plane.occupied_count() == 0:
+                continue  # an all-vacant plane costs nothing
+            completed.extend(self._step_plane(plane))
+        return completed
+
+    def drain(self) -> list:
+        """Run :meth:`step` until the queue is empty and every lane is
+        vacant; returns all tickets completed (order = completion order)."""
+        completed = []
+        while len(self.scheduler) or any(
+            p.occupied_count() for p in self._planes.values()
+        ):
+            completed.extend(self.step())
+        return completed
+
+    def idle(self) -> bool:
+        return not len(self.scheduler) and not any(
+            p.occupied_count() for p in self._planes.values()
+        )
+
+    # -- results ---------------------------------------------------------------
+
+    def result(self, ticket: int) -> SolveResult:
+        """Pop a finished ticket's result; ``KeyError`` if the ticket is
+        unknown or still queued/solving (step/drain first)."""
+        return self._results.pop(ticket)
+
+    def ready(self, ticket: int) -> bool:
+        return ticket in self._results
+
+    # -- introspection ---------------------------------------------------------
+
+    def status(self) -> dict:
+        """Queue depth plus per-plane lane occupancy (vacant lanes are the
+        admission capacity the next ``step`` can fill)."""
+        planes = {}
+        for key, p in self._planes.items():
+            occ = p.occupied_count()
+            planes[str(key)] = {
+                "lanes": p.lanes.num_lanes,
+                "occupied": occ,
+                "vacant": p.lanes.num_lanes - occ,
+                "tickets": sorted(
+                    r.ticket for r in p.requests if r is not None
+                ),
+            }
+        return {"queued": len(self.scheduler), "planes": planes}
+
+    def stats(self) -> dict:
+        """Service counters: throughput inputs (completed, chunk_calls),
+        plane occupancy (live_lane_chunks / lane_chunks) and residency."""
+        s = dict(self._stats)
+        s["queued"] = len(self.scheduler)
+        s["planes"] = len(self._planes)
+        s["occupancy"] = (
+            s["live_lane_chunks"] / s["lane_chunks"] if s["lane_chunks"] else 0.0
+        )
+        n_done = s["completed"]
+        s["wait_s_mean"] = s["wait_s_total"] / n_done if n_done else 0.0
+        s["residency_s_mean"] = s["residency_s_total"] / n_done if n_done else 0.0
+        return s
+
+    def cache_stats(self) -> dict:
+        return self.cache.stats().to_dict()
+
+    # -- internals -------------------------------------------------------------
+
+    def _plane_key(self, g) -> tuple:
+        return (g.W, g.n if self.config.codec == "basic" else None)
+
+    def _plane_for(self, g) -> _LivePlane:
+        key = self._plane_key(g)
+        plane = self._planes.get(key)
+        if plane is None:
+            plane = _LivePlane(self.spec, self.config, self.cache, key)
+            self._planes[key] = plane
+        return plane
+
+    def _tenant_occupied(self) -> dict:
+        occ: dict = {}
+        for p in self._planes.values():
+            for r in p.requests:
+                if r is not None and r.tenant is not None:
+                    occ[r.tenant] = occ.get(r.tenant, 0) + 1
+        return occ
+
+    def _admit(self) -> None:
+        tenant_occ = self._tenant_occupied()
+        for req in self.scheduler.ordered():
+            if self.scheduler.tenant_blocked(req, tenant_occ):
+                continue
+            plane = self._plane_for(req.g)
+            lane = plane.vacant_lane()
+            if lane is None:
+                continue  # this plane is full; later keys may still admit
+            self._admit_into(plane, lane, req)
+            self.scheduler.remove(req)
+            if req.tenant is not None:
+                tenant_occ[req.tenant] = tenant_occ.get(req.tenant, 0) + 1
+
+    def _admit_into(self, plane: _LivePlane, lane: int, req: SolveRequest) -> None:
+        cfg, spec, g = self.config, self.spec, req.g
+        # the solo pad for this n must match the plane's (true for the
+        # native record schema; a problem with n-sized record extras under
+        # the optimized codec would silently skew byte accounting — refuse)
+        solo_pad = make_codec(cfg.codec, g.n, problem=spec).pad_words
+        if solo_pad != plane.pad:
+            raise ValueError(
+                f"problem {spec.name!r} has n-dependent record padding "
+                f"(pad {solo_pad} at n={g.n} vs plane {plane.pad}); "
+                "serve it with codec='basic' (exact-n planes)"
+            )
+        initial_best = problems_base.initial_bound(spec, g, cfg.mode, req.k)
+        worker = _engine.make_instance_state(
+            spec, g, cfg.num_workers, plane.cap, plane.W, initial_best
+        )
+        plane.lanes = lane_swap_in(plane.lanes, lane, worker, req.ticket)
+        plane.datas = problems_base.write_instance(plane.datas, lane, spec, g)
+        if plane.use_fpt:
+            plane.fpt_bounds = plane.fpt_bounds.at[lane].set(
+                int(spec.fpt_target(req.k))
+            )
+        plane.requests[lane] = req
+        plane.admit_s[lane] = time.perf_counter() - self._t0
+        self.cache.note(
+            "batch",
+            spec,
+            cfg,
+            plane.pad,
+            plane.use_fpt,
+            (plane.n_max, plane.W, plane.cap, cfg.num_workers, plane.lanes.num_lanes),
+        )
+
+    def _step_plane(self, plane: _LivePlane) -> list:
+        occupied_before = plane.lanes.occupied()
+        self._stats["chunk_calls"] += 1
+        self._stats["lane_chunks"] += plane.lanes.num_lanes
+        self._stats["live_lane_chunks"] += int(occupied_before.sum())
+        plane.lanes, _ran = step_lanes(
+            plane.plane, plane.datas, plane.lanes, plane.fpt_bounds
+        )
+        done_h, rounds_h = map(
+            np.asarray, jax.device_get((plane.lanes.done, plane.lanes.rounds))
+        )
+
+        finished = np.flatnonzero(occupied_before & done_h)
+        over_budget = [
+            lane
+            for lane in np.flatnonzero(occupied_before & ~done_h)
+            if rounds_h[lane]
+            >= min(
+                plane.requests[lane].deadline or self.config.max_rounds,
+                self.config.max_rounds,
+            )
+        ]
+        if len(finished) == 0 and not over_budget:
+            return []
+
+        host = _engine._fetch_batch_state(plane.lanes.worker)
+        completed = []
+        for lane in list(finished) + list(over_budget):
+            lane = int(lane)
+            req = plane.requests[lane]
+            evicted = lane not in finished
+            now = time.perf_counter() - self._t0
+            r = _engine._extract_result(
+                host,
+                lane,
+                self.spec,
+                req.g,
+                int(rounds_h[lane]),
+                now - plane.admit_s[lane],
+                mode=self.config.mode,
+                k=req.k,
+                num_workers=self.config.num_workers,
+                packed_status=self.config.packed_status,
+            )
+            res = from_engine_result(r, problem=self.spec.name, backend="spmd")
+            res.stats["service"] = {
+                "lane": lane,
+                "plane": str(plane.key),
+                "wait_s": plane.admit_s[lane] - req.submit_s,
+                "residency_s": now - plane.admit_s[lane],
+                "deadline_hit": evicted and req.deadline is not None,
+            }
+            self._results[req.ticket] = res
+            completed.append(req.ticket)
+            self._stats["completed"] += 1
+            self._stats["evicted"] += int(evicted)
+            self._stats["wait_s_total"] += plane.admit_s[lane] - req.submit_s
+            self._stats["residency_s_total"] += now - plane.admit_s[lane]
+            plane.lanes = lane_retire(plane.lanes, lane)
+            plane.requests[lane] = None
+        return completed
+
+
+class AsyncSolveService:
+    """asyncio pump over a :class:`SolveService` for the serve front end.
+
+    ``await svc.solve(g, ...)`` submits and resolves when the lane retires;
+    the pump thread-pools :meth:`SolveService.step` so the event loop stays
+    responsive while chunks run on device.  Submission and stepping share
+    one lock (the service itself is not thread-safe).
+    """
+
+    def __init__(self, service: SolveService, idle_sleep_s: float = 0.002):
+        self.service = service
+        self.idle_sleep_s = idle_sleep_s
+        self._lock = threading.Lock()
+        self._futures: dict = {}
+        self._task = None
+        self._closing = False
+
+    async def __aenter__(self):
+        import asyncio
+
+        self._task = asyncio.get_running_loop().create_task(self._pump())
+        return self
+
+    async def __aexit__(self, *exc):
+        import asyncio
+
+        self._closing = True
+        if self._task is not None:
+            await self._task
+            self._task = None
+        return False
+
+    async def solve(self, g, **submit_kw) -> SolveResult:
+        import asyncio
+
+        with self._lock:
+            ticket = self.service.submit(g, **submit_kw)
+        fut = asyncio.get_running_loop().create_future()
+        self._futures[ticket] = fut
+        return await fut
+
+    async def _pump(self):
+        import asyncio
+
+        loop = asyncio.get_running_loop()
+
+        def locked_step():
+            with self._lock:
+                return self.service.step()
+
+        while True:
+            with self._lock:
+                idle = self.service.idle()
+            if idle:
+                if self._closing:
+                    return
+                await asyncio.sleep(self.idle_sleep_s)
+                continue
+            done = await loop.run_in_executor(None, locked_step)
+            for ticket in done:
+                fut = self._futures.pop(ticket, None)
+                if fut is not None and not fut.done():
+                    fut.set_result(self.service.result(ticket))
+            await asyncio.sleep(0)

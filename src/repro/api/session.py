@@ -125,6 +125,32 @@ class SolverSession:
             solved.extend(tickets)
         return solved
 
+    # -- the continuous-batching service ---------------------------------------
+
+    def serve(self, **config_overrides) -> "SolveService":
+        """A :class:`~repro.api.service.SolveService` over this session's
+        (problem, config, cache): a live compiled plane whose freed lanes
+        re-admit queued instances continuously, instead of the fixed
+        ``batch_size`` planes behind ``submit``/``poll``/``flush``.
+
+        >>> svc = session.serve(service_lanes=8)
+        >>> t = svc.submit(g); svc.drain(); svc.result(t)
+
+        The service shares this session's plane cache, so a session that
+        already solved on a shape serves it warm (spmd backend only).
+        """
+        from repro.api.service import SolveService
+
+        if self.backend.name != "spmd":
+            raise ValueError(
+                f"serve() needs the spmd backend (live batched plane); "
+                f"this session uses {self.backend.name!r}"
+            )
+        cfg = self.config
+        if config_overrides:
+            cfg = cfg.replace(**config_overrides)
+        return SolveService(self.problem, cfg, cache=self.cache)
+
     # -- introspection ---------------------------------------------------------
 
     def cache_stats(self) -> dict:
@@ -148,10 +174,17 @@ def solve_stream_session(
     cache: Optional[PlaneCache] = None,
     backend="spmd",
 ) -> list:
-    """Session-backed stream solver: one :class:`SolverSession` per problem
-    in the stream, ALL sharing one :class:`PlaneCache` — so a mixed request
-    stream replaying the same (problem, W, B) planes pays each compile once.
-    Returns per-instance :class:`SolveResult` in submission order.
+    """Session-backed stream solver: one continuous
+    :class:`~repro.api.service.SolveService` per problem in the stream, ALL
+    sharing one :class:`PlaneCache` — so a mixed request stream replaying
+    the same (problem, W) planes pays each compile once, and a lane freed
+    by an easy instance re-admits the next queued one mid-flight instead of
+    idling until its whole batch drains.  ``batch_size`` becomes the
+    service's lane count.  Returns per-instance :class:`SolveResult` in
+    submission order.
+
+    Non-spmd backends have no live batched plane; they fall back to the
+    fixed-batch ``submit``/``flush`` path with identical results.
 
     This is what :func:`repro.serving.balancer.solve_stream` drives when no
     explicit solver is injected.
@@ -162,21 +195,37 @@ def solve_stream_session(
         raise ValueError("need one problem, or one per instance")
     cache = cache if cache is not None else PlaneCache()
     cfg = config if config is not None else SolveConfig()
-    sessions: dict = {}
+    if get_backend(backend).name != "spmd":
+        sessions: dict = {}
+        tickets = []
+        for g, p in zip(graphs, probs):
+            name = get_problem(p).name
+            if name not in sessions:
+                sessions[name] = SolverSession(
+                    problem=name,
+                    backend=backend,
+                    config=cfg.replace(batch_size=batch_size),
+                    cache=cache,
+                )
+            tickets.append((name, sessions[name].submit(g)))
+        for s in sessions.values():
+            s.flush()
+        return [sessions[name].result(t) for name, t in tickets]
+
+    from repro.api.service import SolveService
+
+    services: dict = {}
     tickets = []
     for g, p in zip(graphs, probs):
         name = get_problem(p).name
-        if name not in sessions:
-            sessions[name] = SolverSession(
-                problem=name,
-                backend=backend,
-                config=cfg.replace(batch_size=batch_size),
-                cache=cache,
+        if name not in services:
+            services[name] = SolveService(
+                name, cfg.replace(service_lanes=batch_size), cache=cache
             )
-        tickets.append((name, sessions[name].submit(g)))
-    for s in sessions.values():
-        s.flush()
-    return [sessions[name].result(t) for name, t in tickets]
+        tickets.append((name, services[name].submit(g)))
+    for svc in services.values():
+        svc.drain()
+    return [services[name].result(t) for name, t in tickets]
 
 
 # re-exported for the quickstart; the spmd backend is the common default

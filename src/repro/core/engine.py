@@ -34,6 +34,7 @@ Responsibilities (the paper's startup/termination bookkeeping):
 from __future__ import annotations
 
 import dataclasses
+import functools
 import warnings
 from typing import Optional
 
@@ -201,6 +202,8 @@ class BatchResult:
     # packing record: one (W, n_max, [instance indices]) triple per bucket
     buckets: list
     compactions: int
+    # plane occupancy counters (see api.result.BatchSolveResult.lane_stats)
+    lane_stats: dict = dataclasses.field(default_factory=dict)
 
 
 def _bucket_instances(graphs, by_n: bool = False) -> dict:
@@ -222,19 +225,39 @@ def _bucket_instances(graphs, by_n: bool = False) -> dict:
     return buckets
 
 
+@functools.lru_cache(maxsize=None)
+def _blank_state_builder(num_workers: int, cap: int, W: int):
+    """Jitted per-shape blank (P, ...) state constructor: live-lane
+    admission calls this once per swap-in, so the eager vmap's per-op
+    dispatch would dominate the service's host loop."""
+    return jax.jit(
+        lambda best: jax.vmap(lambda _: make_worker_state(cap, W, best))(
+            jnp.arange(num_workers)
+        )
+    )
+
+
+def make_instance_state(
+    problem, g, num_workers: int, cap: int, W: int, initial_best
+) -> WorkerState:
+    """One instance's (P, ...) worker state, initialized and §3.5-startup-
+    scattered by exactly the solo-solve code path (:func:`make_worker_state`
+    + :func:`_scatter_startup`) — one source of truth for the Algorithm-7
+    placement, shared by solo solves, batch stacking, and live-lane
+    admission (the service writes this state into a freed lane)."""
+    state = _blank_state_builder(num_workers, cap, W)(jnp.int32(initial_best))
+    return _scatter_startup(state, problem, g, num_workers)
+
+
 def _make_batch_state(
     problem, graphs, num_workers: int, cap: int, W: int, initial_bests
 ) -> WorkerState:
-    """(B, P, ...) stacked worker state: each instance is initialized and
-    §3.5-startup-scattered by exactly the solo-solve code path
-    (:func:`make_worker_state` + :func:`_scatter_startup`), then stacked —
-    one source of truth for the Algorithm-7 placement."""
-    per_instance = []
-    for g, initial_best in zip(graphs, initial_bests):
-        state = jax.vmap(lambda _: make_worker_state(cap, W, initial_best))(
-            jnp.arange(num_workers)
-        )
-        per_instance.append(_scatter_startup(state, problem, g, num_workers))
+    """(B, P, ...) stacked worker state: each instance initialized via
+    :func:`make_instance_state`, then stacked."""
+    per_instance = [
+        make_instance_state(problem, g, num_workers, cap, W, initial_best)
+        for g, initial_best in zip(graphs, initial_bests)
+    ]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *per_instance)
 
 

@@ -258,3 +258,11 @@ def pending_per_worker(f: Frontier) -> jnp.ndarray:
     scalar inside a per-worker superstep but useless for the host-side
     per-instance quiescence/compaction checks."""
     return f.active.sum(axis=-1).astype(jnp.int32)
+
+
+def pending_per_instance(f: Frontier) -> jnp.ndarray:
+    """Pending counts per INSTANCE lane of a (B, P, CAP) stacked frontier:
+    the slot and worker axes are reduced, the lane axis survives — the
+    live-service occupancy/residency view (a lane with 0 pending and no
+    in-flight transfer is quiescent and about to free up)."""
+    return f.active.sum(axis=(-1, -2)).astype(jnp.int32)

@@ -53,6 +53,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.frontier import (
     Frontier,
@@ -714,6 +715,146 @@ def build_batch_plane_fn(
 def _expand_like(flags: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
     """Broadcast a (B,) flag vector against a (B, ...) state leaf."""
     return flags.reshape(flags.shape + (1,) * (leaf.ndim - 1))
+
+
+# -- the lane lifecycle --------------------------------------------------------
+#
+# A *lane* is one instance slot of the batched plane: worker-state leaves
+# (B, P, ...) plus the per-lane control scalars.  `LaneState` makes the
+# lifecycle explicit so a batch is no longer an all-or-nothing unit of work:
+# the host can step the plane one chunk at a time (`step_lanes`), slice a
+# finished lane's state out (`lane_slice`), retire it (`lane_retire`) and
+# swap a NEW instance into the freed slot (`lane_swap_in`) — all data-only
+# writes against the parametric batch plane, so a long-lived "live" plane
+# admits work forever without re-tracing.  Both the run-to-completion
+# `solve_many` driver and the continuous solve service (repro.api.service)
+# are built from these four verbs.
+
+
+class LaneState(NamedTuple):
+    """Per-lane lifecycle state of a live batched plane.
+
+    ``worker``  — (B, P, ...) stacked :class:`WorkerState` (the plane state);
+    ``done``    — (B,) bool: quiescent/FPT-finished OR vacant (frozen no-op);
+    ``tag``     — (B,) host int32: the occupant's instance tag, -1 = vacant.
+                  Kept as a numpy array: tags are pure host bookkeeping (the
+                  plane never reads them) and the scheduler consults them
+                  every chunk, so a device round-trip per lookup would be
+                  wasted;
+    ``rounds``  — (B,) int32: supersteps run by the CURRENT occupant (reset
+                  on swap-in).
+    """
+
+    worker: WorkerState
+    done: jnp.ndarray
+    tag: object  # (B,) np.int32 — host-side, see class docstring
+    rounds: jnp.ndarray
+
+    @property
+    def num_lanes(self) -> int:
+        return self.done.shape[0]
+
+    def occupied(self):
+        """(B,) host bool — lanes holding a (possibly finished) instance."""
+        return np.asarray(self.tag) >= 0
+
+
+def make_vacant_lanes(
+    num_lanes: int, num_workers: int, capacity: int, W: int
+) -> LaneState:
+    """An all-vacant live plane: every lane is a frozen no-op (``done``)
+    until an instance is swapped in."""
+    one = jax.vmap(lambda _: make_worker_state(capacity, W, 0))(
+        jnp.arange(num_workers)
+    )
+    worker = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (num_lanes,) + x.shape), one
+    )
+    return LaneState(
+        worker=worker,
+        done=jnp.ones((num_lanes,), bool),
+        tag=np.full((num_lanes,), -1, np.int32),
+        rounds=jnp.zeros((num_lanes,), jnp.int32),
+    )
+
+
+def lane_slice(lanes: LaneState, lane: int) -> WorkerState:
+    """One lane's (P, ...) worker state, sliced out for result extraction."""
+    return jax.tree.map(lambda x: x[lane], lanes.worker)
+
+
+# the admission write, jitted: one fused executable per lane-state shape
+# instead of ~15 eager scatter dispatches per swap-in (`lane` is a traced
+# scalar, so every lane index shares the executable)
+@jax.jit
+def _swap_in_dev(worker_full, worker_one, done, rounds, lane):
+    return (
+        jax.tree.map(
+            lambda full, one: full.at[lane].set(one), worker_full, worker_one
+        ),
+        done.at[lane].set(False),
+        rounds.at[lane].set(0),
+    )
+
+
+def lane_swap_in(
+    lanes: LaneState, lane: int, worker: WorkerState, tag: int
+) -> LaneState:
+    """Admit a freshly startup-scattered instance into ``lane``.
+
+    ``worker`` is a solo (P, ...) state (same shapes as one lane).  The lane
+    un-freezes (``done`` False), its round counter resets, and its tag
+    records the occupant.  Pure data writes — the compiled plane is reused
+    as-is, no re-trace (asserted via ``PLANE_TRACES`` in tests).
+    """
+    new_tag = np.asarray(lanes.tag).copy()
+    new_tag[lane] = tag
+    new_worker, new_done, new_rounds = _swap_in_dev(
+        lanes.worker, worker, lanes.done, lanes.rounds, jnp.int32(lane)
+    )
+    return LaneState(
+        worker=new_worker, done=new_done, tag=new_tag, rounds=new_rounds
+    )
+
+
+_retire_dev = jax.jit(lambda done, lane: done.at[lane].set(True))
+
+
+def lane_retire(lanes: LaneState, lane: int) -> LaneState:
+    """Mark a lane vacant (after collecting its result, or on deadline
+    eviction): frozen no-op until the next swap-in.  The stale worker state
+    is inert — admission overwrites every leaf."""
+    new_tag = np.asarray(lanes.tag).copy()
+    new_tag[lane] = -1
+    return lanes._replace(
+        done=_retire_dev(lanes.done, jnp.int32(lane)), tag=new_tag
+    )
+
+
+def slice_lanes(lanes: LaneState, sel) -> LaneState:
+    """Select/reorder lanes (host-side batch compaction): every leaf —
+    device and host alike — is indexed by ``sel`` along the lane axis."""
+    return jax.tree.map(lambda x: x[sel], lanes)
+
+
+def step_lanes(plane, datas, lanes: LaneState, fpt_bounds=None):
+    """One resumable plane step: run up to ``chunk_rounds`` supersteps of a
+    :func:`build_batch_plane_fn` executable over the live lanes.
+
+    Finished and vacant lanes are frozen inside the plane (their state and
+    per-occupant stats stay bit-identical to a solo run); ``rounds``
+    accumulates each occupant's actual supersteps.  Returns ``(lanes, ran)``
+    where ``ran`` is the chunk's superstep count (0 when every lane was
+    already done — the plane's while_loop exits immediately).
+    """
+    if fpt_bounds is not None:
+        worker, done, delta, ran = plane(datas, lanes.worker, lanes.done, fpt_bounds)
+    else:
+        worker, done, delta, ran = plane(datas, lanes.worker, lanes.done)
+    return (
+        lanes._replace(worker=worker, done=done, rounds=lanes.rounds + delta),
+        ran,
+    )
 
 
 def build_batch_superstep_fn(

@@ -1,91 +1,137 @@
-"""Serving driver: batched greedy decode with the semi-centralized balancer.
+"""Serving driver: the asyncio front end of the continuous-batching solve
+service.
 
-Runs a smoke-scale model end to end: prefill the prompt batch, then decode
-tokens with the KV-cache ``decode_fn``, while the request balancer keeps the
-replica batches full (simulated replicas on CPU; on a pod each replica is a
-data-parallel model copy and the balancer state table is the all-gathered
-O(R)-integer vector — see serving/balancer.py).
+Drives a synthetic Poisson request stream (Erdős–Rényi instances) through
+:class:`repro.api.AsyncSolveService`: every request is submitted the moment
+it "arrives", admission fills lanes freed by finished instances on the ONE
+live compiled plane per (problem, W), and per-request results stream back
+as their lanes retire.  Prints end-to-end latency percentiles (p50/p99,
+arrival → result) and steady-state throughput — the serving view of the
+paper's quasi-equitable load sharing.
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
-      --batch 4 --prompt-len 16 --gen 32
+  PYTHONPATH=src python -m repro.launch.serve --smoke
+  PYTHONPATH=src python -m repro.launch.serve --problem max_clique \
+      --requests 32 --lanes 8 --rate 4.0 --n 24
+
+(The old batched LM-decode demo lives in ``examples/serve_lm.py``.)
 """
 
 from __future__ import annotations
 
 import argparse
+import asyncio
+import json
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.registry import get_config, get_smoke_config
-from repro.models.registry import get_model
-from repro.serving.balancer import simulate
+
+def build_requests(args, rng) -> list:
+    """The synthetic arrival trace: (arrival_s, graph) pairs.  Sizes are
+    drawn uniformly from [n_min, n], all packing into one W=1 plane by
+    default; arrival gaps are exponential at ``rate`` req/s (0 = a burst)."""
+    from repro.graphs.generators import erdos_renyi
+
+    reqs = []
+    t = 0.0
+    for i in range(args.requests):
+        n = int(rng.integers(args.n_min, args.n + 1))
+        g = erdos_renyi(n, args.density, seed=int(rng.integers(1 << 30)))
+        if args.rate > 0:
+            t += float(rng.exponential(1.0 / args.rate))
+        reqs.append((t, g))
+    return reqs
 
 
-def greedy_decode(cfg, model, params, prompts, gen: int):
-    """prompts (B, P) -> generated (B, gen) using the decode cache path."""
-    B, P = prompts.shape
-    cache, _ = model.init_decode_cache(B, P + gen + 1)
-    if cfg.family == "encdec":
-        from repro.models import encdec
+async def run_service(args, reqs) -> dict:
+    from repro.api import AsyncSolveService, SolveConfig, SolveService
 
-        frames = jnp.zeros((B, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype))
-        cache = encdec.prime_cross_cache(params, cfg, cache, frames)
+    cfg = SolveConfig(
+        num_workers=args.workers,
+        steps_per_round=args.steps_per_round,
+        chunk_rounds=args.chunk_rounds,
+        service_lanes=args.lanes,
+        admission=args.admission,
+    )
+    service = SolveService(args.problem, cfg)
+    latencies = []
+    t0 = time.perf_counter()
 
-    decode = jax.jit(model.decode_fn)
-    # prefill token-by-token through the decode path (smoke-scale; a real
-    # deployment prefills with the chunked forward then transplants the cache)
-    tok = prompts[:, :1]
-    for t in range(P):
-        logits, cache = decode(params, cache, prompts[:, t : t + 1])
-    out = []
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    for _ in range(gen):
-        out.append(tok)
-        logits, cache = decode(params, cache, tok)
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    return jnp.concatenate(out, axis=1)
+    async def one(arrival_s, g):
+        # hold the request until its Poisson arrival, then submit
+        now = time.perf_counter() - t0
+        if arrival_s > now:
+            await asyncio.sleep(arrival_s - now)
+        submit = time.perf_counter()
+        r = await svc.solve(g, deadline=args.deadline)
+        latencies.append(time.perf_counter() - submit)
+        return r
+
+    async with AsyncSolveService(service) as svc:
+        results = await asyncio.gather(*(one(a, g) for a, g in reqs))
+    wall = time.perf_counter() - t0
+
+    lat = np.array(sorted(latencies))
+    stats = service.stats()
+    return {
+        "requests": len(reqs),
+        "wall_s": wall,
+        "instances_per_s": len(reqs) / wall,
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p99_s": float(np.percentile(lat, 99)),
+        "occupancy": stats["occupancy"],
+        "evicted": stats["evicted"],
+        "best_sizes": [r.best_size for r in results],
+        "cache": service.cache_stats(),
+    }
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--replicas", type=int, default=8)
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--problem", default="max_clique")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--lanes", type=int, default=8,
+                    help="service lanes per live plane")
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--steps-per-round", type=int, default=16)
+    ap.add_argument("--chunk-rounds", type=int, default=8)
+    ap.add_argument("--n", type=int, default=26, help="max instance size")
+    ap.add_argument("--n-min", type=int, default=14)
+    ap.add_argument("--density", type=float, default=0.5)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate, req/s (0 = burst)")
+    ap.add_argument("--deadline", type=int, default=None,
+                    help="superstep budget per request (anytime eviction)")
+    ap.add_argument("--admission", choices=("fifo", "priority"),
+                    default="priority")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny settings for CI")
+    ap.add_argument("--json", action="store_true",
+                    help="print the full stats dict as JSON")
     args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 12)
+        args.n = min(args.n, 20)
+        args.workers = min(args.workers, 4)
+        args.lanes = min(args.lanes, 4)
+        args.steps_per_round = min(args.steps_per_round, 8)
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    model = get_model(cfg)
-    params, _ = model.init(jax.random.key(args.seed))
     rng = np.random.default_rng(args.seed)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32
-    )
-    t0 = time.perf_counter()
-    toks = greedy_decode(cfg, model, params, prompts, args.gen)
-    dt = time.perf_counter() - t0
-    print(f"[serve] generated {toks.shape} in {dt:.1f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
-    print("[serve] sample:", np.asarray(toks[0, :16]))
-
-    # balancer demonstration: hot-shard arrival pattern, with/without
-    works = list(rng.integers(8, 256, 64))
-    on = simulate(args.replicas, 8, works, balance=True, seed=args.seed)
-    off = simulate(args.replicas, 8, works, balance=False, seed=args.seed)
-    print(
-        f"[balancer] makespan {off['rounds']} -> {on['rounds']} rounds "
-        f"({off['rounds']/on['rounds']:.1f}x), idle-slot-steps "
-        f"{off['idle_slot_steps']} -> {on['idle_slot_steps']}, "
-        f"{on['transfers']} transfers, "
-        f"{on['control_ints_per_round']} control ints/round"
-    )
+    reqs = build_requests(args, rng)
+    out = asyncio.run(run_service(args, reqs))
+    if args.json:
+        print(json.dumps(out, indent=2))
+    else:
+        print(
+            f"[serve] {out['requests']} requests in {out['wall_s']:.2f}s "
+            f"({out['instances_per_s']:.2f} inst/s), latency p50 "
+            f"{out['latency_p50_s']*1e3:.0f}ms p99 "
+            f"{out['latency_p99_s']*1e3:.0f}ms, plane occupancy "
+            f"{out['occupancy']:.2f}, evicted {out['evicted']}"
+        )
+        print(f"[serve] cache: {out['cache']}")
 
 
 if __name__ == "__main__":

@@ -355,6 +355,49 @@ def slice_instances(data: ProblemData, sel) -> ProblemData:
     return data._replace(n=data.n[sel], adj=data.adj[sel])
 
 
+def make_blank_batch_data(num_lanes: int, n_max: int, W: int) -> ProblemData:
+    """An all-vacant batched :class:`ProblemData` for a live plane: zero
+    adjacency and n=0 per lane (inert under the frozen-lane select —
+    admission overwrites a lane's slice via :func:`write_instance`)."""
+    v = np.arange(n_max, dtype=np.int32)
+    return ProblemData(
+        n=jnp.zeros((num_lanes,), jnp.int32),
+        adj=jnp.zeros((num_lanes, n_max, W), jnp.uint32),
+        word_idx=jnp.asarray(v // WORD_BITS),
+        bit_idx=jnp.asarray((v % WORD_BITS).astype(np.uint32)),
+    )
+
+
+# jitted lane write (one executable per (B, n_max, W) shape — live-plane
+# admission calls this once per swap-in, where eager scatters add up)
+@jax.jit
+def _write_lane_dev(n, adj, lane, n_val, adj_block):
+    return n.at[lane].set(n_val), adj.at[lane].set(adj_block)
+
+
+def write_instance(
+    data: ProblemData, lane: int, problem: BranchingProblem, g
+) -> ProblemData:
+    """Write one instance into lane ``lane`` of a batched ``data`` (live-
+    plane admission).  Rows past ``g.n`` are zeroed (isolated, never-in-mask
+    vertices — exactly :func:`make_batch_data`'s padding rule, so the
+    admitted instance's trace is bit-identical to its solo solve).  Pure
+    data writes: shapes are unchanged, the compiled plane is reused as-is.
+    """
+    n_max, W = data.adj.shape[1], data.adj.shape[2]
+    if g.n > n_max or g.W > W:
+        raise ValueError(
+            f"instance (n={g.n}, W={g.W}) exceeds the live plane's "
+            f"(n_max={n_max}, W={W}) packing"
+        )
+    adj = np.zeros((n_max, W), np.uint32)
+    adj[: g.n, : g.W] = np.asarray(problem.host_adj(g), np.uint32)
+    new_n, new_adj = _write_lane_dev(
+        data.n, data.adj, jnp.int32(lane), jnp.int32(g.n), jnp.asarray(adj)
+    )
+    return data._replace(n=new_n, adj=new_adj)
+
+
 def expand_frontier(
     problem: BranchingProblem,
     g,

@@ -140,6 +140,8 @@ class SolveBatcher:
     graphs: dict = dataclasses.field(default_factory=dict)  # seq -> instance
     problems: dict = dataclasses.field(default_factory=dict)  # seq -> name
     _seq: int = 0
+    # tickets drained into a batch but not yet taken by a solver
+    _drained: set = dataclasses.field(default_factory=set)
 
     def submit(self, g, problem: str = "vertex_cover") -> int:
         """Queue one instance; returns its ticket (submission sequence)."""
@@ -155,17 +157,46 @@ class SolveBatcher:
 
     def _drain(self, rb: RequestBatch) -> list:
         lanes, rb.active_work = rb.active_work, []
-        return [-neg_seq for _, neg_seq in lanes]
+        tickets = [-neg_seq for _, neg_seq in lanes]
+        self._drained.update(tickets)
+        return tickets
 
     def problem_of(self, ticket) -> str:
         """The problem a queued ticket was submitted under (call before
         ``take``, which evicts the record)."""
         return self.problems[ticket]
 
+    def status(self) -> dict:
+        """Per-bucket admission view: ``queued`` (not yet in a lane),
+        ``admitted`` (in a lane awaiting drain) and ``vacant`` lanes.  A
+        partially-filled bucket's unfilled lanes ARE vacant — a flush()
+        solves only the real instances, the plane pads internally and no
+        placeholder ticket ever exists for a padded lane."""
+        out = {}
+        for key, rb in self.buckets.items():
+            out[key] = {
+                "queued": len(rb.queued_work),
+                "admitted": rb.occupancy,
+                "vacant": rb.capacity - rb.occupancy,
+            }
+        return out
+
     def take(self, tickets) -> list:
         """Hand a drained batch's instances to the solver, EVICTING them —
         the batcher holds a graph only between submit and take, so a
-        long-lived admission stream does not accumulate solved instances."""
+        long-lived admission stream does not accumulate solved instances.
+
+        Only tickets from a drained batch (``ready_batches``/``flush``
+        output) are takeable: taking a still-queued ticket would leave its
+        stale queue entry to drain later with no instance behind it — a
+        placeholder result — so that raises instead."""
+        not_ready = [t for t in tickets if t not in self._drained]
+        if not_ready:
+            raise ValueError(
+                f"ticket(s) {not_ready} not in any drained batch yet; "
+                "take() only accepts ready_batches()/flush() output"
+            )
+        self._drained.difference_update(tickets)
         for t in tickets:
             self.problems.pop(t, None)
         return [self.graphs.pop(t) for t in tickets]

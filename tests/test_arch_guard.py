@@ -128,6 +128,7 @@ def test_core_resolves_problems_through_the_registry():
 # list here AND the README quickstart), never an accidental side effect of a
 # refactor.
 PUBLIC_API = [
+    "AsyncSolveService",
     "BACKENDS",
     "Backend",
     "BatchSolveResult",
@@ -135,6 +136,7 @@ PUBLIC_API = [
     "PlaneCache",
     "SolveConfig",
     "SolveResult",
+    "SolveService",
     "SolverSession",
     "get_backend",
     "known_backends",
@@ -167,6 +169,7 @@ def test_backend_registry_covers_the_advertised_backends():
 # section), never a refactor side effect.  Defaults are pinned for the knobs
 # whose silent flip would change what every solve runs (hot-path selection).
 SOLVE_CONFIG_FIELDS = [
+    "admission",
     "batch_size",
     "capacity",
     "chunk_rounds",
@@ -186,8 +189,10 @@ SOLVE_CONFIG_FIELDS = [
     "queue_cap_per_p",
     "seed",
     "send_metadata",
+    "service_lanes",
     "skip_empty_transfer",
     "steps_per_round",
+    "tenant_max_lanes",
     "transfer_impl",
     "use_mesh",
     "use_priority_queue",

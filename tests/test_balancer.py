@@ -1,6 +1,7 @@
 """Semi-centralized serving balancer: the paper's guarantees, restated."""
 
 import numpy as np
+import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.serving.balancer import (
@@ -74,6 +75,40 @@ def test_solve_batcher_buckets_and_fills():
     assert [[g.n for g in b.take(batch)] for batch in rest] == [[20]]
     assert sorted(s for batch in batches + rest for s in batch) == tickets
     assert b.graphs == {}  # take() evicted everything the stream solved
+
+
+def test_batcher_status_surfaces_vacant_lanes_of_partial_buckets():
+    """A partially-filled bucket reports its unfilled lanes as vacant —
+    no placeholder ticket ever pads a plane lane."""
+    b = SolveBatcher(batch_size=4)
+    for n in (20, 22, 24):
+        b.submit(_FakeGraph(n))
+    assert b.status() == {
+        ("vertex_cover", 1): {"queued": 3, "admitted": 0, "vacant": 4}
+    }
+    batches = b.flush()  # 3 requests into a 4-lane plane: 1 lane vacant
+    assert [len(batch) for batch in batches] == [3]
+    assert b.status() == {
+        ("vertex_cover", 1): {"queued": 0, "admitted": 0, "vacant": 4}
+    }
+    # exactly the real instances come back — no padded placeholder result
+    assert sorted(g.n for g in b.take(batches[0])) == [20, 22, 24]
+
+
+def test_batcher_take_rejects_undrained_tickets():
+    """take() on a still-queued ticket would leave a stale queue entry to
+    drain later with no instance behind it, so it must refuse."""
+    b = SolveBatcher(batch_size=2)
+    t1 = b.submit(_FakeGraph(20))
+    with pytest.raises(ValueError, match=f"{t1}"):
+        b.take([t1])  # never drained
+    t2 = b.submit(_FakeGraph(22))
+    (batch,) = b.ready_batches()
+    with pytest.raises(ValueError, match="not in any drained batch"):
+        b.take([t1, t2, 99])  # 99 unknown -> still an error, batch intact
+    assert sorted(g.n for g in b.take(batch)) == [20, 22]
+    with pytest.raises(ValueError):
+        b.take(batch)  # double-take: already evicted
 
 
 def test_solve_stream_returns_submission_order():
