@@ -36,7 +36,7 @@ def run(smoke: bool = False) -> dict:
             f"{r.best_size} != {want}"
         )
         assert verify_clique(g, r.best_sol)
-        assert not r.stats["overflow"]
+        assert not r.stats.overflow
         sizes.append(r.best_size)
 
     print(f"max_clique on G({n}, {p}) x {B}: sizes={sizes}, "

@@ -56,9 +56,9 @@ def budget_rows():
                     nodes=r.nodes_expanded,
                     transfers=r.tasks_transferred,
                     nodes_per_round=round(r.nodes_expanded / r.rounds, 1),
-                    control_B_per_round=r.stats["control_bytes_per_round"],
+                    control_B_per_round=r.stats.control_bytes_per_round,
                     transfer_B_per_round=round(
-                        r.stats["transfer_bytes_per_round"], 1
+                        r.stats.transfer_bytes_per_round, 1
                     ),
                 )
             )
@@ -140,11 +140,11 @@ def transfer_ab():
                 impl=impl,
                 best=r.best_size,
                 rounds=r.rounds,
-                transfer_rounds=r.stats["transfer_rounds"],
+                transfer_rounds=r.stats.transfer_rounds,
                 tasks_moved=r.tasks_transferred,
-                payload_B_total=r.stats["transfer_bytes_total"],
+                payload_B_total=r.stats.transfer_bytes_total,
                 payload_B_per_round=round(
-                    r.stats["transfer_bytes_per_round"], 1
+                    r.stats.transfer_bytes_per_round, 1
                 ),
                 record_B=4 * rec_words,
             )
@@ -155,7 +155,7 @@ def transfer_ab():
     )
     # sparse payload is exactly the matched records; no-match rounds are free
     rec_words = 2 * n_words(g.n) + 1
-    assert b.stats["transfer_bytes_total"] == 4 * rec_words * b.tasks_transferred
+    assert b.stats.transfer_bytes_total == 4 * rec_words * b.tasks_transferred
     return out
 
 

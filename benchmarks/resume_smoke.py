@@ -1,0 +1,176 @@
+"""Kill-and-resume smoke: a real SIGKILL mid-solve, then a bit-identical
+resume.
+
+The parent solves the instance uninterrupted in-process (the baseline),
+then launches a CHILD process running the same checkpointed solve
+(``--child``, ``checkpoint_every=1`` so every chunk boundary is durable),
+SIGKILLs it as soon as checkpoints appear on disk, and resumes from the
+survivors via :meth:`SolverSession.resume` — asserting the final result is
+bit-identical to the baseline (modulo wall-clock and the durability
+counters, which are outside the contract).
+
+Also records the §H durability overheads for EXPERIMENTS.md /
+RESUME_smoke.json: checkpoint write cost (checkpointed vs plain solve wall),
+on-disk checkpoint size, and resume latency.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.resume_smoke           # full
+  PYTHONPATH=src python -m benchmarks.resume_smoke --smoke   # CI sizes
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+RESUME_JSON = "RESUME_smoke.json"
+
+# the one deterministic workload both processes build (seeded generator)
+def _workload(smoke: bool):
+    from repro.api import SolveConfig
+    from repro.graphs.generators import erdos_renyi
+
+    n = 36 if smoke else 40
+    g = erdos_renyi(n, 0.25, seed=3)
+    cfg = SolveConfig(
+        num_workers=4, steps_per_round=2, chunk_rounds=1, checkpoint_every=1
+    )
+    return g, cfg
+
+
+def _child(ckpt_dir: str, smoke: bool) -> None:
+    from repro.api import SolverSession
+
+    g, cfg = _workload(smoke)
+    SolverSession(config=cfg).solve(g, checkpoint_dir=ckpt_dir)
+
+
+def _dir_bytes(d: str) -> int:
+    total = 0
+    for root, _, files in os.walk(d):
+        total += sum(os.path.getsize(os.path.join(root, f)) for f in files)
+    return total
+
+
+def run(smoke: bool = False) -> dict:
+    from repro.api import PlaneCache, SolverSession
+    from repro.checkpoint.store import latest_step
+
+    g, cfg = _workload(smoke)
+    cache = PlaneCache()
+
+    # warm the plane cache first so plain-vs-checkpointed walls compare
+    # steady-state write cost, not one run's compile against the other's hit
+    SolverSession(config=cfg, cache=cache).solve(g)
+    t0 = time.perf_counter()
+    base = SolverSession(config=cfg, cache=cache).solve(g)
+    plain_wall = time.perf_counter() - t0
+
+    # checkpoint write overhead: same solve, every chunk durable, in-process
+    d_cost = tempfile.mkdtemp(prefix="resume_smoke_cost_")
+    try:
+        t0 = time.perf_counter()
+        ck_run = SolverSession(config=cfg, cache=cache).solve(
+            g, checkpoint_dir=d_cost
+        )
+        ckpt_wall = time.perf_counter() - t0
+        ckpt_bytes = _dir_bytes(os.path.join(d_cost, f"step_{latest_step(d_cost)}"))
+        writes = ck_run.stats.checkpoints_written
+    finally:
+        shutil.rmtree(d_cost, ignore_errors=True)
+
+    # the kill: child checkpoints to disk, parent SIGKILLs it mid-solve
+    d = tempfile.mkdtemp(prefix="resume_smoke_kill_")
+    try:
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "benchmarks.resume_smoke",
+             "--child", "--dir", d] + (["--smoke"] if smoke else []),
+            env={**os.environ, "PYTHONPATH": "src"},
+        )
+        deadline = time.time() + 300
+        killed_mid_solve = False
+        while time.time() < deadline:
+            if latest_step(d) is not None:
+                proc.send_signal(signal.SIGKILL)
+                proc.wait()
+                killed_mid_solve = True
+                break
+            if proc.poll() is not None:
+                break  # solved before the first checkpoint landed
+            time.sleep(0.05)
+        else:
+            proc.kill()
+            proc.wait()
+            raise RuntimeError("child produced no checkpoint within 300s")
+        step = latest_step(d)
+        assert step is not None, "no checkpoint survived the kill"
+
+        t0 = time.perf_counter()
+        resumed = SolverSession.resume(d, cache=cache, checkpoint_dir=None)
+        resume_wall = time.perf_counter() - t0
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+    # bit-identity vs the uninterrupted baseline (wall_s and the durability
+    # counters are explicitly outside the contract)
+    assert resumed.best_size == base.best_size
+    assert resumed.rounds == base.rounds
+    assert resumed.nodes_expanded == base.nodes_expanded
+    assert resumed.tasks_transferred == base.tasks_transferred
+    assert resumed.stats.transfer_bytes_total == base.stats.transfer_bytes_total
+    assert (np.asarray(resumed.best_sol) == np.asarray(base.best_sol)).all()
+
+    out = dict(
+        n=g.n,
+        rounds=int(base.rounds),
+        killed_mid_solve=killed_mid_solve,
+        killed_at_step=int(step),
+        resumed_best=int(resumed.best_size),
+        bit_identical=True,
+        plain_wall_s=round(plain_wall, 3),
+        checkpointed_wall_s=round(ckpt_wall, 3),
+        checkpoint_overhead_pct=round(
+            100.0 * (ckpt_wall - plain_wall) / max(plain_wall, 1e-9), 1
+        ),
+        checkpoints_written=int(writes),
+        checkpoint_bytes=int(ckpt_bytes),
+        resume_wall_s=round(resume_wall, 3),
+    )
+    print(
+        f"kill-and-resume: SIGKILL at step {step} "
+        f"({'mid-solve' if killed_mid_solve else 'after finish'}), resume "
+        f"bit-identical (best={out['resumed_best']}, rounds={out['rounds']}); "
+        f"checkpoint {out['checkpoint_bytes']}B, write overhead "
+        f"{out['checkpoint_overhead_pct']}% at every-chunk cadence, resume "
+        f"{out['resume_wall_s']}s"
+    )
+    with open(RESUME_JSON, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(f"wrote {RESUME_JSON}")
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="benchmarks.resume_smoke")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--dir", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+    if args.child:
+        _child(args.dir, args.smoke)
+    else:
+        run(args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,7 @@
   session_warm      cold-vs-warm SolverSession (compiled-plane cache gate)
   explore_throughput fused vs reference exploration plane, nodes/sec (gated)
   serve_load        continuous-admission service vs fixed batching (gated)
+  resume_smoke      SIGKILL mid-solve + bit-identical resume (durability gate)
   balancer_bench    beyond-paper serving balancer
   kernel_bench      kernel arithmetic-intensity table
 
@@ -37,6 +38,7 @@ from benchmarks import (
     explore_throughput,
     kernel_bench,
     protocol_stats,
+    resume_smoke,
     serve_load,
     session_warm,
     speedup,
@@ -51,6 +53,7 @@ ALL = {
     "session_warm": session_warm,
     "explore_throughput": explore_throughput,
     "serve_load": serve_load,
+    "resume_smoke": resume_smoke,
     "balancer_bench": balancer_bench,
     "kernel_bench": kernel_bench,
     "speedup": speedup,

@@ -86,7 +86,7 @@ def _throughput(gs, cfg) -> dict:
         "fixed_inst_per_s": len(gs) / fixed_s,
         "continuous_speedup": fixed_s / cont_s,
         "occupancy": svc.stats()["occupancy"],
-        "overflow_counts": [r.stats["overflow_count"] for r in results],
+        "overflow_counts": [r.stats.overflow_count for r in results],
     }
 
 

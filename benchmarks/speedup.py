@@ -59,7 +59,7 @@ def donation_rows(graph_name, g, workers_list):
             if base is None:
                 base = r.best_size
             assert r.best_size == base
-            transfer_rounds = r.stats["transfer_rounds"]
+            transfer_rounds = r.stats.transfer_rounds
             out.append(
                 dict(
                     graph=graph_name,

@@ -31,7 +31,7 @@ def main():
     print(
         f"semi-centralized:  mvc={sim.best_size} "
         f"(async protocol sim, {sim.tasks_transferred} transfers, "
-        f"{sim.stats['failed_requests']} failed requests)"
+        f"{sim.stats.failed_requests} failed requests)"
     )
 
     r = SolverSession(backend="spmd", config=cfg).solve(g)

@@ -37,7 +37,7 @@ def main():
         for t in svc.step():  # tickets whose lane retired this step
             r = svc.result(t)  # pops; KeyError before the lane retires
             print(f"ticket {t}: best={r.best_size} rounds={r.rounds} "
-                  f"lane={r.stats['service']['lane']}")
+                  f"lane={r.stats.service.lane}")
 
     stats = svc.stats()
     print(f"occupancy={stats['occupancy']:.2f} over "

@@ -82,10 +82,10 @@ def main():
         cent = SolverSession(backend="centralized", config=cfg).solve(g)
         assert semi.best_size == cent.best_size == best.best_size
         print(f"{'semi-centralized':<22}{codec:<12}{semi.rounds:<14}"
-              f"{semi.stats['total_bytes']:<12}{semi.stats['center_bytes']:<10}"
-              f"{semi.stats['failed_requests']:<7}")
+              f"{semi.stats.total_bytes:<12}{semi.stats.center_bytes:<10}"
+              f"{semi.stats.failed_requests:<7}")
         print(f"{'centralized':<22}{codec:<12}{cent.rounds:<14}"
-              f"{cent.stats['total_bytes']:<12}{'-':<10}{'-':<7}")
+              f"{cent.stats.total_bytes:<12}{'-':<10}{'-':<7}")
 
     # SPMD engine: both data-plane paths must agree bit-for-bit (the sparse
     # masked-psum path moves only matched records; gather moves the full
@@ -99,13 +99,13 @@ def main():
         spmd[impl] = r
         print(f"\nSPMD engine [{impl:>6}]: mvc={r.best_size}, "
               f"{r.rounds} supersteps, {r.tasks_transferred} transfers, "
-              f"{r.stats['control_bytes_per_round']} control B/round, "
-              f"{r.stats['transfer_bytes_per_round']:.1f} payload B/round")
+              f"{r.stats.control_bytes_per_round} control B/round, "
+              f"{r.stats.transfer_bytes_per_round:.1f} payload B/round")
     a, b = spmd["sparse"], spmd["gather"]
     assert a.best_size == b.best_size and (a.best_sol == b.best_sol).all()
     print("transfer paths bit-identical; sparse payload "
-          f"{a.stats['transfer_bytes_total']}B vs gather "
-          f"{b.stats['transfer_bytes_total']}B")
+          f"{a.stats.transfer_bytes_total}B vs gather "
+          f"{b.stats.transfer_bytes_total}B")
 
     # batched solve plane: mixed-size instances packed onto one executable,
     # per-instance results bit-identical to solo solves — and the session's

@@ -13,8 +13,16 @@ Quickstart::
     session = SolverSession(problem="vertex_cover",
                             config=SolveConfig(num_workers=8))
     r = session.solve(g)            # SolveResult
+    r.stats.transfer_bytes_total    # typed SolveStats (no more dict keys)
     batch = session.solve_many(gs)  # BatchSolveResult
     session.cache_stats()           # warm/cold executable accounting
+
+Durability::
+
+    cfg = SolveConfig(checkpoint_dir="ckpt", checkpoint_every=4)
+    SolverSession(config=cfg).solve(g)      # checkpoints every 4 chunks
+    SolverSession.resume("ckpt")            # ... after a kill: bit-identical
+    svc.checkpoint("ckpt"); SolveService.restore("ckpt")   # live service
 
 ``__all__`` below is the pinned public API — ``tests/test_arch_guard.py``
 snapshots it, so additions/removals are deliberate, reviewed changes.
@@ -28,9 +36,16 @@ from repro.api.backends import (
 )
 from repro.api.cache import CacheStats, PlaneCache
 from repro.api.config import SolveConfig
-from repro.api.result import BatchSolveResult, SolveResult
+from repro.api.result import (
+    BatchSolveResult,
+    LaneStats,
+    ServiceStats,
+    SolveResult,
+    SolveStats,
+)
 from repro.api.service import AsyncSolveService, SolveService
 from repro.api.session import SolverSession, solve_stream_session
+from repro.checkpoint.solve import CheckpointError, SolveCheckpoint
 
 __all__ = [
     "AsyncSolveService",
@@ -38,10 +53,15 @@ __all__ = [
     "BACKENDS",
     "BatchSolveResult",
     "CacheStats",
+    "CheckpointError",
+    "LaneStats",
     "PlaneCache",
+    "ServiceStats",
+    "SolveCheckpoint",
     "SolveConfig",
     "SolveResult",
     "SolveService",
+    "SolveStats",
     "SolverSession",
     "get_backend",
     "known_backends",

@@ -30,6 +30,7 @@ from repro.api.cache import PlaneCache
 from repro.api.config import SolveConfig
 from repro.api.result import (
     BatchSolveResult,
+    LaneStats,
     SolveResult,
     from_engine_result,
     from_sequential,
@@ -49,6 +50,31 @@ from repro.problems import base as problems_base
 # FPT bounds are call-time arguments, so same-shape solves never re-trace.
 
 
+def _solo_fingerprint(spec, g, cfg):
+    from repro.checkpoint import solve as _ckpt
+
+    return _ckpt.config_fingerprint(
+        "solo", spec.name, cfg, [_ckpt.graph_digest(g)]
+    )
+
+
+def _write_solo_checkpoint(spec, g, cfg, fingerprint, state, rounds) -> None:
+    """One atomic SolveCheckpoint of a solo solve at a chunk boundary."""
+    from repro.checkpoint import solve as _ckpt
+    from repro.core.superstep import worker_state_to_flat
+
+    ck = _ckpt.SolveCheckpoint(
+        kind="solo",
+        problem=spec.name,
+        config=cfg.replace(resume_from=None).to_dict(),
+        fingerprint=fingerprint,
+        rounds=rounds,
+        arrays=worker_state_to_flat(state),
+    )
+    ck.pack_graphs([0], [g])
+    ck.save(cfg.checkpoint_dir, rounds)
+
+
 def solve_spmd(
     spec,
     g,
@@ -60,7 +86,16 @@ def solve_spmd(
 ):
     """One instance on the SPMD engine; returns a legacy ``EngineResult``
     (the session wraps it into the unified schema, the engine shim returns
-    it as-is)."""
+    it as-is).
+
+    Durability: with ``cfg.checkpoint_dir`` set, a
+    :class:`~repro.checkpoint.solve.SolveCheckpoint` is written atomically
+    every ``cfg.checkpoint_every`` chunks at the host-sync boundary (step
+    number = rounds completed); with ``cfg.resume_from`` set, the solve
+    restores that state (fingerprint-checked) and continues — the loop is
+    deterministic, so the final result is bit-identical to an
+    uninterrupted run (modulo ``wall_s``).
+    """
     k = cfg.solo_k()
     W = n_words(g.n)
     cap = cfg.capacity or (4 * g.n + 8 * cfg.lanes)
@@ -68,7 +103,33 @@ def solve_spmd(
     data = problems_base.make_data(spec, g)
     pad = make_codec(cfg.codec, g.n, problem=spec).pad_words
 
-    if initial_state is None:
+    fingerprint = (
+        _solo_fingerprint(spec, g, cfg)
+        if (cfg.checkpoint_dir or cfg.resume_from)
+        else None
+    )
+    rounds = 0
+    resumed_from = None
+    if cfg.resume_from is not None:
+        if initial_state is not None:
+            raise ValueError("pass resume_from or initial_state, not both")
+        from repro.checkpoint import solve as _ckpt
+        from repro.core.superstep import worker_state_from_flat
+
+        ck = _ckpt.SolveCheckpoint.load(cfg.resume_from)
+        if ck.kind != "solo":
+            raise _ckpt.CheckpointError(
+                f"{cfg.resume_from} holds a {ck.kind!r} checkpoint; "
+                f"solve() resumes 'solo' checkpoints only"
+            )
+        _ckpt.require_fingerprint(
+            ck, fingerprint, what=f"solve({spec.name})"
+        )
+        state = worker_state_from_flat(ck.arrays)
+        rounds = ck.rounds
+        resumed_from = cfg.resume_from
+        cap = int(state.frontier.masks.shape[-2])
+    elif initial_state is None:
         state = jax.vmap(
             lambda _: _engine.make_worker_state(cap, W, initial_best)
         )(jnp.arange(cfg.num_workers))
@@ -117,17 +178,25 @@ def solve_spmd(
             step = lambda s: plane(data, s)  # noqa: E731
 
     t0 = time.perf_counter()
-    rounds = 0
+    chunks = 0
+    checkpoints_written = 0
     while rounds < cfg.max_rounds:
         state, done, ran = step(state)
         done, ran = jax.device_get((done, ran))
         rounds += int(ran)
+        chunks += 1
         if bool(done):
             break
+        if (
+            cfg.checkpoint_dir is not None
+            and chunks % cfg.checkpoint_every == 0
+        ):
+            _write_solo_checkpoint(spec, g, cfg, fingerprint, state, rounds)
+            checkpoints_written += 1
     wall = time.perf_counter() - t0
 
     host = _engine._fetch_batch_state(jax.tree.map(lambda x: x[None], state))
-    return _engine._extract_result(
+    r = _engine._extract_result(
         host,
         0,
         spec,
@@ -139,6 +208,9 @@ def solve_spmd(
         num_workers=cfg.num_workers,
         packed_status=cfg.packed_status,
     )
+    r.checkpoints_written = checkpoints_written
+    r.resumed_from = resumed_from
+    return r
 
 
 def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
@@ -154,8 +226,24 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
     (``tag`` = original instance index, per-lane ``rounds`` accumulated on
     device) — the same per-lane machinery the continuous service drives —
     and reports plane occupancy in ``BatchResult.lane_stats``.
+
+    Durability mirrors :func:`solve_spmd`: every ``cfg.checkpoint_every``
+    chunks the in-flight bucket's full LaneState/ProblemData plus every
+    already-finalized result is checkpointed (step number = cumulative
+    chunk count, monotonic across buckets); ``cfg.resume_from`` restores
+    mid-bucket and skips the buckets whose results are already final.
+    Results are finalized EAGERLY (at compaction / bucket end) so the
+    checkpoint never needs a lane that was compacted away; per-instance
+    ``wall_s`` (the amortized bucket share) is patched at bucket end and
+    is the one field outside the bit-identity contract.
     """
-    from repro.core.superstep import LaneState, slice_lanes, step_lanes
+    from repro.core.superstep import (
+        LaneState,
+        lane_state_from_flat,
+        lane_state_to_flat,
+        slice_lanes,
+        step_lanes,
+    )
 
     if cfg.use_mesh:
         raise ValueError(
@@ -176,34 +264,132 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
     compactions = 0
     wall_total = 0.0
     lane_stats = {"chunk_calls": 0, "lane_chunks": 0, "live_lane_chunks": 0}
+    chunks_total = 0
+    checkpoints_written = 0
+
+    fingerprint = None
+    if cfg.checkpoint_dir is not None or cfg.resume_from is not None:
+        from repro.checkpoint import solve as _ckpt
+
+        fingerprint = _ckpt.config_fingerprint(
+            "many", spec.name, cfg, [_ckpt.graph_digest(g) for g in graphs]
+        )
+
+    def extract(host, lane, oi, rounds_i, wall):
+        return _engine._extract_result(
+            host,
+            lane,
+            spec,
+            graphs[oi],
+            rounds_i,
+            wall,
+            mode=cfg.mode,
+            k=ks[oi],
+            num_workers=cfg.num_workers,
+            packed_status=cfg.packed_status,
+        )
+
+    resume_ck = None
+    resume_bucket = -1
+    if cfg.resume_from is not None:
+        from repro.checkpoint import solve as _ckpt
+
+        resume_ck = _ckpt.SolveCheckpoint.load(cfg.resume_from)
+        if resume_ck.kind != "many":
+            raise _ckpt.CheckpointError(
+                f"{cfg.resume_from} holds a {resume_ck.kind!r} checkpoint; "
+                f"solve_many() resumes 'many' checkpoints only"
+            )
+        _ckpt.require_fingerprint(
+            resume_ck, fingerprint, what=f"solve_many({spec.name})"
+        )
+        meta = resume_ck.meta
+        results = {
+            int(i): _ckpt.engine_result_from_dict(d)
+            for i, d in meta["results"].items()
+        }
+        compactions = int(meta["compactions"])
+        chunks_total = int(meta["chunks_total"])
+        lane_stats.update(
+            {k: int(v) for k, v in meta["lane_stats"].items() if k in lane_stats}
+        )
+        resume_bucket = int(meta["bucket_idx"])
+
+    def write_checkpoint(bi, lanes, datas, fpt_bounds, total_ran):
+        from repro.checkpoint import solve as _ckpt
+
+        ck = _ckpt.SolveCheckpoint(
+            kind="many",
+            problem=spec.name,
+            config=cfg.replace(resume_from=None).to_dict(),
+            fingerprint=fingerprint,
+            rounds=total_ran,
+            arrays=lane_state_to_flat(lanes),
+            meta={
+                "bucket_idx": bi,
+                "total_ran": total_ran,
+                "chunks_total": chunks_total,
+                "compactions": compactions,
+                "lane_stats": {
+                    k: int(v) for k, v in lane_stats.items()
+                },
+                "results": {
+                    str(i): _ckpt.engine_result_to_dict(r)
+                    for i, r in results.items()
+                },
+            },
+        )
+        ck.arrays.update(_ckpt.data_to_flat(datas, "datas"))
+        if fpt_bounds is not None:
+            ck.arrays["fpt_bounds"] = np.asarray(jax.device_get(fpt_bounds))
+        ck.pack_graphs(range(B), graphs)
+        ck.save(cfg.checkpoint_dir, chunks_total)
 
     buckets = _engine._bucket_instances(graphs, by_n=(cfg.codec == "basic"))
-    for (W, _), idxs in sorted(buckets.items()):
-        t0 = time.perf_counter()
+    for bi, ((W, _), idxs) in enumerate(sorted(buckets.items())):
         bucket_graphs = [graphs[i] for i in idxs]
         n_max = max(g.n for g in bucket_graphs)
         bucket_record.append((W, n_max, list(idxs)))
+        if resume_ck is not None and bi < resume_bucket:
+            continue  # fully finalized before the checkpoint — restored above
+        t0 = time.perf_counter()
         cap = cfg.capacity or (4 * n_max + 8 * cfg.lanes)
         pad = make_codec(cfg.codec, n_max, problem=spec).pad_words
-        initial_bests = [
-            problems_base.initial_bound(spec, g, cfg.mode, ks[i])
-            for i, g in zip(idxs, bucket_graphs)
-        ]
 
-        datas = problems_base.make_batch_data(spec, bucket_graphs, n_max, W)
-        lanes = LaneState(
-            worker=_engine._make_batch_state(
-                spec, bucket_graphs, cfg.num_workers, cap, W, initial_bests
-            ),
-            done=jnp.zeros((len(idxs),), bool),
-            tag=np.asarray(idxs, np.int32),
-            rounds=jnp.zeros((len(idxs),), jnp.int32),
-        )
-        fpt_bounds = (
-            jnp.asarray(np.array([spec.fpt_target(ks[i]) for i in idxs], np.int32))
-            if use_fpt
-            else None
-        )
+        if resume_ck is not None and bi == resume_bucket:
+            from repro.checkpoint import solve as _ckpt
+
+            lanes = lane_state_from_flat(resume_ck.arrays)
+            datas = _ckpt.data_from_flat(resume_ck.arrays, "datas")
+            fpt_bounds = (
+                jnp.asarray(resume_ck.arrays["fpt_bounds"]) if use_fpt else None
+            )
+            total_ran = int(resume_ck.meta["total_ran"])
+            live_h = ~np.asarray(jax.device_get(lanes.done))
+            resume_ck = None  # at most one in-flight bucket per checkpoint
+        else:
+            initial_bests = [
+                problems_base.initial_bound(spec, g, cfg.mode, ks[i])
+                for i, g in zip(idxs, bucket_graphs)
+            ]
+            datas = problems_base.make_batch_data(spec, bucket_graphs, n_max, W)
+            lanes = LaneState(
+                worker=_engine._make_batch_state(
+                    spec, bucket_graphs, cfg.num_workers, cap, W, initial_bests
+                ),
+                done=jnp.zeros((len(idxs),), bool),
+                tag=np.asarray(idxs, np.int32),
+                rounds=jnp.zeros((len(idxs),), jnp.int32),
+            )
+            fpt_bounds = (
+                jnp.asarray(
+                    np.array([spec.fpt_target(ks[i]) for i in idxs], np.int32)
+                )
+                if use_fpt
+                else None
+            )
+            total_ran = 0
+            live_h = np.ones(len(idxs), bool)  # live entering the next chunk
 
         plane = cache.batch_plane(spec, cfg, pad, use_fpt)
 
@@ -213,9 +399,7 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
                 (n_max, W, cap, cfg.num_workers, n_lanes),
             )
 
-        note(len(idxs))
-        live_h = np.ones(len(idxs), bool)  # live entering the next chunk
-        total_ran = 0
+        note(lanes.num_lanes)
         while total_ran < cfg.max_rounds:
             lane_stats["chunk_calls"] += 1
             lane_stats["lane_chunks"] += lanes.num_lanes
@@ -223,6 +407,7 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
             lanes, ran = step_lanes(plane, datas, lanes, fpt_bounds)
             done_h, ran_h = jax.device_get((lanes.done, ran))
             total_ran += int(ran_h)
+            chunks_total += 1
             done_h = np.asarray(done_h)
             live_h = ~done_h
             if done_h.all():
@@ -245,7 +430,9 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
                 for lane in np.flatnonzero(done_h):
                     oi = int(lanes.tag[lane])
                     if oi not in results and lane not in fillers:
-                        results[oi] = (lane, host, int(rounds_h[lane]))
+                        results[oi] = extract(
+                            host, lane, oi, int(rounds_h[lane]), 0.0
+                        )
                 sel = np.concatenate([live, fillers]).astype(np.int64)
                 lanes = slice_lanes(lanes, sel)
                 datas = problems_base.slice_instances(datas, sel)
@@ -254,36 +441,33 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
                 live_h = live_h[sel]
                 compactions += 1
                 note(lanes.num_lanes)
+            if (
+                cfg.checkpoint_dir is not None
+                and chunks_total % cfg.checkpoint_every == 0
+            ):
+                write_checkpoint(bi, lanes, datas, fpt_bounds, total_ran)
+                checkpoints_written += 1
 
         host = _engine._fetch_batch_state(lanes.worker)
         rounds_h = np.asarray(jax.device_get(lanes.rounds))
         for lane in range(lanes.num_lanes):
             oi = int(lanes.tag[lane])
             if oi not in results:
-                results[oi] = (lane, host, int(rounds_h[lane]))
+                results[oi] = extract(host, lane, oi, int(rounds_h[lane]), 0.0)
         bucket_wall = time.perf_counter() - t0
         wall_total += bucket_wall
         per_wall = bucket_wall / max(len(idxs), 1)
         for oi in idxs:
-            lane, host_i, rounds_i = results[oi]
-            results[oi] = _engine._extract_result(
-                host_i,
-                lane,
-                spec,
-                graphs[oi],
-                rounds_i,
-                per_wall,
-                mode=cfg.mode,
-                k=ks[oi],
-                num_workers=cfg.num_workers,
-                packed_status=cfg.packed_status,
-            )
+            results[oi].wall_s = per_wall
 
     lane_stats["occupancy"] = (
         lane_stats["live_lane_chunks"] / lane_stats["lane_chunks"]
         if lane_stats["lane_chunks"]
         else 0.0
     )
+    for r in results.values():
+        r.checkpoints_written = checkpoints_written
+        r.resumed_from = cfg.resume_from
     return _engine.BatchResult(
         results=[results[i] for i in range(B)],
         wall_s=wall_total,
@@ -352,7 +536,7 @@ class SpmdBackend(Backend):
             wall_s=br.wall_s,
             buckets=br.buckets,
             compactions=br.compactions,
-            lane_stats=br.lane_stats,
+            lane_stats=LaneStats(**br.lane_stats),
         )
 
 

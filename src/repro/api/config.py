@@ -72,6 +72,15 @@ class SolveConfig:
     admission: str = "priority"
     # per-tenant cap on simultaneously occupied lanes (None = no fairness cap)
     tenant_max_lanes: Optional[int] = None
+    # -- durability (checkpoint/resume via repro.checkpoint.solve) ------------
+    # directory for periodic SolveCheckpoints (None = no checkpointing);
+    # written atomically every `checkpoint_every` chunks (solo/solve_many)
+    # or service steps, at the host-sync boundary
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 8
+    # resume a previous solve: a checkpoint dir (latest step) or one
+    # step_<N> subdir; the trajectory-config fingerprint must match
+    resume_from: Optional[str] = None
     # -- discrete-event simulator backends ------------------------------------
     latency: int = 1
     seed: int = 0
@@ -111,7 +120,7 @@ class SolveConfig:
         for name in (
             "num_workers", "steps_per_round", "lanes", "donate_k",
             "chunk_rounds", "max_rounds", "batch_size", "service_lanes",
-            "max_ticks", "queue_cap_per_p",
+            "checkpoint_every", "max_ticks", "queue_cap_per_p",
         ):
             v = getattr(self, name)
             if not isinstance(v, int) or isinstance(v, bool) or v < 1:
@@ -131,6 +140,13 @@ class SolveConfig:
             )
         if self.mode == "fpt" and self.k is None:
             raise ValueError("SolveConfig: mode='fpt' requires k")
+        for name in ("checkpoint_dir", "resume_from"):
+            v = getattr(self, name)
+            if v is not None and not isinstance(v, str):
+                raise ValueError(
+                    f"SolveConfig.{name} must be None or a path string, "
+                    f"got {v!r}"
+                )
 
     # -- derived views ---------------------------------------------------------
 

@@ -5,17 +5,145 @@ Before this layer each engine had its own result type — ``EngineResult``
 (sequential reference) — so callers special-cased per backend.
 :class:`SolveResult` is the one schema: the solution and the universally
 meaningful counters are first-class fields, and everything
-backend-specific (byte accounting, message histograms, overflow flags)
-rides in ``stats`` under stable keys.  :class:`BatchSolveResult` is the
-``solve_many`` analogue, preserving submission order.
+backend-specific rides in ``stats``.
+
+``stats`` used to be an ad-hoc dict whose key set drifted per backend; it
+is now the TYPED :class:`SolveStats` dataclass (with the service envelope
+as a nested :class:`ServiceStats` and batch-plane occupancy as
+:class:`LaneStats` on :class:`BatchSolveResult`).  The field sets are
+pinned in ``tests/test_arch_guard.py`` — adding a counter is a deliberate,
+reviewed schema change.  Legacy dict-style access (``r.stats["overflow"]``,
+``.get``, ``in``) keeps working through a :class:`DeprecationWarning` shim;
+read attributes (``r.stats.overflow``) instead.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import numpy as np
+
+
+class _DictAccessShim:
+    """Deprecation bridge: the pre-unification dict-style stats access
+    (``stats["key"]`` / ``.get`` / ``in`` / ``.keys``) warns once per call
+    site and delegates to the dataclass attributes."""
+
+    def _names(self):
+        return [f.name for f in dataclasses.fields(self)]
+
+    def _warn(self):
+        warnings.warn(
+            f"dict-style access to {type(self).__name__} is deprecated and "
+            f"will be removed in v1.0; read attributes instead "
+            f"(e.g. r.stats.overflow_count, r.stats.service.deadline_hit)",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+
+    def __getitem__(self, key):
+        self._warn()
+        if key in self._names():
+            return getattr(self, key)
+        raise KeyError(key)
+
+    def get(self, key, default=None):
+        self._warn()
+        return getattr(self, key, default) if key in self._names() else default
+
+    def __contains__(self, key):
+        self._warn()
+        return key in self._names()
+
+    def keys(self):
+        self._warn()
+        return list(self._names())
+
+    def items(self):
+        self._warn()
+        return [(name, getattr(self, name)) for name in self._names()]
+
+    def to_dict(self) -> dict:
+        """Plain-dict view (JSON-safe, no deprecation warning)."""
+        return _jsonable(dataclasses.asdict(self))
+
+
+@dataclasses.dataclass
+class ServiceStats(_DictAccessShim):
+    """The service envelope around one completed ticket (spmd service only):
+    which lane/plane solved it, queue wait and lane residency (wall
+    seconds), and whether its superstep deadline evicted it with an
+    anytime result."""
+
+    lane: int = -1
+    plane: str = ""
+    wait_s: float = 0.0
+    residency_s: float = 0.0
+    deadline_hit: bool = False
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServiceStats":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls) if f.name in d})
+
+
+@dataclasses.dataclass
+class SolveStats(_DictAccessShim):
+    """Every backend-specific counter, one typed superset schema.
+
+    Fields a backend does not track stay at their zero defaults — the
+    groups below document who writes what.  ``service`` is only populated
+    for results delivered by a :class:`~repro.api.service.SolveService`.
+    """
+
+    # -- SPMD engine (collective-traffic accounting, EXPERIMENTS §Perf) -------
+    overflow: bool = False
+    overflow_count: int = 0
+    control_bytes_per_round: int = 0
+    transfer_rounds: int = 0
+    transfer_bytes_total: int = 0
+    transfer_bytes_per_round: float = 0.0
+    # -- durability (spmd checkpoint/resume) ----------------------------------
+    checkpoints_written: int = 0
+    resumed_from: Optional[str] = None
+    # -- discrete-event simulator backends ------------------------------------
+    ticks: int = 0
+    failed_requests: int = 0
+    termination_cancelled: int = 0
+    total_bytes: int = 0
+    center_bytes: int = 0
+    msg_count: dict = dataclasses.field(default_factory=dict)
+    msg_bytes: dict = dataclasses.field(default_factory=dict)
+    # -- sequential reference -------------------------------------------------
+    pruned: int = 0
+    solutions: int = 0
+    max_depth: int = 0
+    # -- service envelope (None outside SolveService) -------------------------
+    service: Optional[ServiceStats] = None
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SolveStats":
+        known = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in known and k != "service"}
+        service = d.get("service")
+        if service is not None:
+            kw["service"] = ServiceStats.from_dict(service)
+        return cls(**kw)
+
+
+@dataclasses.dataclass
+class LaneStats(_DictAccessShim):
+    """Batched-plane occupancy: ``chunk_calls`` (compiled chunk dispatches),
+    ``lane_chunks`` (chunk_calls × plane width — paid lane slots),
+    ``live_lane_chunks`` (slots that held an unfinished instance) and their
+    ratio ``occupancy`` — the utilization a continuous-admission service
+    raises over fixed batching (zeros where not tracked)."""
+
+    chunk_calls: int = 0
+    lane_chunks: int = 0
+    live_lane_chunks: int = 0
+    occupancy: float = 0.0
 
 
 @dataclasses.dataclass
@@ -37,15 +165,32 @@ class SolveResult:
     rounds: int
     nodes_expanded: int
     tasks_transferred: int
-    stats: dict = dataclasses.field(default_factory=dict)
+    stats: SolveStats = dataclasses.field(default_factory=SolveStats)
 
     def to_dict(self) -> dict:
         """JSON-safe view (``best_sol`` as a list of packed u32 words)."""
         d = dataclasses.asdict(self)
         if self.best_sol is not None:
             d["best_sol"] = [int(w) for w in np.asarray(self.best_sol, np.uint32)]
-        d["stats"] = _jsonable(self.stats)
+        d["stats"] = _jsonable(d["stats"])
         return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SolveResult":
+        """Inverse of :meth:`to_dict` (the service checkpoint round-trip)."""
+        sol = d.get("best_sol")
+        return cls(
+            problem=d["problem"],
+            backend=d["backend"],
+            best_size=d["best_size"],
+            best_sol=None if sol is None else np.asarray(sol, np.uint32),
+            found=d["found"],
+            wall_s=d["wall_s"],
+            rounds=d["rounds"],
+            nodes_expanded=d["nodes_expanded"],
+            tasks_transferred=d["tasks_transferred"],
+            stats=SolveStats.from_dict(d.get("stats") or {}),
+        )
 
 
 @dataclasses.dataclass
@@ -55,13 +200,8 @@ class BatchSolveResult:
 
     ``buckets`` is the packing record — one ``(W, n_max, [indices])`` triple
     per compiled bucket (empty for backends that solve instance-by-
-    instance); ``compactions`` counts host-side batch compactions.
-
-    ``lane_stats`` reports plane occupancy: ``chunk_calls`` (compiled chunk
-    dispatches), ``lane_chunks`` (chunk_calls × plane width — paid lane
-    slots), ``live_lane_chunks`` (slots that held an unfinished instance)
-    and their ratio ``occupancy`` — the utilization a continuous-admission
-    service raises over fixed batching (empty where not tracked).
+    instance); ``compactions`` counts host-side batch compactions;
+    ``lane_stats`` is the typed :class:`LaneStats` occupancy record.
     """
 
     problem: str
@@ -70,7 +210,7 @@ class BatchSolveResult:
     wall_s: float
     buckets: list = dataclasses.field(default_factory=list)
     compactions: int = 0
-    lane_stats: dict = dataclasses.field(default_factory=dict)
+    lane_stats: LaneStats = dataclasses.field(default_factory=LaneStats)
 
     def __len__(self) -> int:
         return len(self.results)
@@ -104,14 +244,16 @@ def from_engine_result(r, *, problem: str, backend: str = "spmd") -> SolveResult
         rounds=r.rounds,
         nodes_expanded=r.nodes_expanded,
         tasks_transferred=r.tasks_transferred,
-        stats={
-            "overflow": r.overflow,
-            "overflow_count": r.overflow_count,
-            "control_bytes_per_round": r.control_bytes_per_round,
-            "transfer_rounds": r.transfer_rounds,
-            "transfer_bytes_total": r.transfer_bytes_total,
-            "transfer_bytes_per_round": r.transfer_bytes_per_round,
-        },
+        stats=SolveStats(
+            overflow=r.overflow,
+            overflow_count=r.overflow_count,
+            control_bytes_per_round=r.control_bytes_per_round,
+            transfer_rounds=r.transfer_rounds,
+            transfer_bytes_total=r.transfer_bytes_total,
+            transfer_bytes_per_round=r.transfer_bytes_per_round,
+            checkpoints_written=r.checkpoints_written,
+            resumed_from=r.resumed_from,
+        ),
     )
 
 
@@ -128,17 +270,17 @@ def from_sim_result(r, *, problem: str, backend: str, wall_s: float) -> SolveRes
         rounds=r.ticks,
         nodes_expanded=s.nodes_expanded,
         tasks_transferred=s.tasks_transferred,
-        stats={
+        stats=SolveStats(
             # host explorers keep unbounded Python frontiers: nothing to drop
-            "overflow_count": 0,
-            "ticks": r.ticks,
-            "failed_requests": s.failed_requests,
-            "termination_cancelled": s.termination_cancelled,
-            "total_bytes": s.total_bytes,
-            "center_bytes": s.center_bytes,
-            "msg_count": dict(s.msg_count),
-            "msg_bytes": dict(s.msg_bytes),
-        },
+            overflow_count=0,
+            ticks=r.ticks,
+            failed_requests=s.failed_requests,
+            termination_cancelled=s.termination_cancelled,
+            total_bytes=s.total_bytes,
+            center_bytes=s.center_bytes,
+            msg_count=dict(s.msg_count),
+            msg_bytes=dict(s.msg_bytes),
+        ),
     )
 
 
@@ -154,10 +296,10 @@ def from_sequential(best, sol, stats, *, problem: str, wall_s: float) -> SolveRe
         rounds=stats.nodes,
         nodes_expanded=stats.nodes,
         tasks_transferred=0,
-        stats={
-            "overflow_count": 0,  # host recursion: no fixed-capacity pool
-            "pruned": stats.pruned,
-            "solutions": stats.solutions,
-            "max_depth": stats.max_depth,
-        },
+        stats=SolveStats(
+            overflow_count=0,  # host recursion: no fixed-capacity pool
+            pruned=stats.pruned,
+            solutions=stats.solutions,
+            max_depth=stats.max_depth,
+        ),
     )

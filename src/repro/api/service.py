@@ -53,11 +53,13 @@ import numpy as np
 
 from repro.api.cache import PlaneCache
 from repro.api.config import SolveConfig
-from repro.api.result import SolveResult, from_engine_result
+from repro.api.result import ServiceStats, SolveResult, from_engine_result
 from repro.core import engine as _engine
 from repro.core.encoding import make_codec
 from repro.core.superstep import (
     lane_retire,
+    lane_state_from_flat,
+    lane_state_to_flat,
     lane_swap_in,
     make_vacant_lanes,
     step_lanes,
@@ -77,6 +79,31 @@ class SolveRequest:
     tenant: Optional[str] = None
     k: Optional[int] = None  # fpt decision target (fpt mode only)
     submit_s: float = 0.0
+
+
+def _req_meta(req: SolveRequest) -> dict:
+    """JSON-able scheduling attributes (the graph rides in the checkpoint's
+    array payload, keyed by ticket)."""
+    return {
+        "ticket": req.ticket,
+        "priority": req.priority,
+        "deadline": req.deadline,
+        "tenant": req.tenant,
+        "k": req.k,
+        "submit_s": req.submit_s,
+    }
+
+
+def _req_from_meta(m: dict, graphs: dict) -> SolveRequest:
+    return SolveRequest(
+        ticket=int(m["ticket"]),
+        g=graphs[int(m["ticket"])],
+        priority=int(m["priority"]),
+        deadline=m["deadline"],
+        tenant=m["tenant"],
+        k=m["k"],
+        submit_s=float(m["submit_s"]),
+    )
 
 
 class LaneScheduler:
@@ -253,7 +280,10 @@ class SolveService:
 
     def step(self) -> list:
         """Admit into vacant lanes, run ONE compiled chunk per live plane,
-        retire finished lanes; returns the tickets completed this step."""
+        retire finished lanes; returns the tickets completed this step.
+
+        With ``config.checkpoint_dir`` set, every ``checkpoint_every``-th
+        step also writes a service checkpoint (see :meth:`checkpoint`)."""
         self._stats["steps"] += 1
         self._admit()
         completed = []
@@ -261,6 +291,11 @@ class SolveService:
             if plane.occupied_count() == 0:
                 continue  # an all-vacant plane costs nothing
             completed.extend(self._step_plane(plane))
+        if (
+            self.config.checkpoint_dir is not None
+            and self._stats["steps"] % self.config.checkpoint_every == 0
+        ):
+            self.checkpoint(self.config.checkpoint_dir)
         return completed
 
     def drain(self) -> list:
@@ -287,6 +322,14 @@ class SolveService:
 
     def ready(self, ticket: int) -> bool:
         return ticket in self._results
+
+    def tickets(self) -> list:
+        """Every outstanding ticket (queued or on a lane), sorted — after
+        :meth:`restore` this is the work the service still owes."""
+        out = {r.ticket for r in self.scheduler.ordered()}
+        for p in self._planes.values():
+            out.update(r.ticket for r in p.requests if r is not None)
+        return sorted(out)
 
     # -- introspection ---------------------------------------------------------
 
@@ -322,6 +365,136 @@ class SolveService:
 
     def cache_stats(self) -> dict:
         return self.cache.stats().to_dict()
+
+    # -- durability ------------------------------------------------------------
+
+    def checkpoint(
+        self, directory: Optional[str] = None, *, blocking: bool = True
+    ) -> str:
+        """Snapshot the ENTIRE service — every live plane's LaneState +
+        instance tensors, the pending queue, finished-but-unclaimed
+        results, ticket counter and service stats — atomically through
+        :mod:`repro.checkpoint.store` (step number = service steps).
+
+        A service restored from this checkpoint (:meth:`restore`) finishes
+        every admitted ticket with answers bit-identical to the
+        uninterrupted service: lane state is exact, admission is a pure
+        function of the restored queue/occupancy, and deadlines are
+        superstep budgets carried in the restored per-lane ``rounds``.
+        """
+        from repro.checkpoint import solve as _ckpt
+
+        directory = directory or self.config.checkpoint_dir
+        if directory is None:
+            raise ValueError(
+                "no checkpoint directory: pass one or set "
+                "SolveConfig.checkpoint_dir"
+            )
+        ck = _ckpt.SolveCheckpoint(
+            kind="service",
+            problem=self.spec.name,
+            config=self.config.replace(resume_from=None).to_dict(),
+            fingerprint=_ckpt.config_fingerprint(
+                "service", self.spec.name, self.config, []
+            ),
+            rounds=self._stats["steps"],
+            arrays={},
+        )
+        planes_meta = []
+        for pi, (key, plane) in enumerate(self._planes.items()):
+            ck.arrays.update(lane_state_to_flat(plane.lanes, f"plane{pi}/lanes"))
+            ck.arrays.update(_ckpt.data_to_flat(plane.datas, f"plane{pi}/datas"))
+            if plane.use_fpt:
+                ck.arrays[f"plane{pi}/fpt_bounds"] = np.asarray(
+                    jax.device_get(plane.fpt_bounds)
+                )
+            planes_meta.append(
+                {
+                    "key": list(key),
+                    "requests": [
+                        None if r is None else _req_meta(r)
+                        for r in plane.requests
+                    ],
+                    "admit_s": [float(a) for a in plane.admit_s],
+                }
+            )
+        live = [
+            r
+            for p in self._planes.values()
+            for r in p.requests
+            if r is not None
+        ]
+        queued = list(self.scheduler._queue)
+        ck.pack_graphs(
+            [r.ticket for r in live + queued], [r.g for r in live + queued]
+        )
+        ck.meta.update(
+            {
+                "planes": planes_meta,
+                "queue": [_req_meta(r) for r in queued],
+                "results": {
+                    str(t): r.to_dict() for t, r in self._results.items()
+                },
+                "next_ticket": self._next_ticket,
+                "stats": dict(self._stats),
+            }
+        )
+        return ck.save(directory, self._stats["steps"], blocking=blocking)
+
+    @classmethod
+    def restore(
+        cls,
+        path: str,
+        *,
+        step: Optional[int] = None,
+        cache: Optional[PlaneCache] = None,
+    ) -> "SolveService":
+        """Rebuild a service from a :meth:`checkpoint` snapshot (a
+        checkpoint dir — latest step — or one ``step_<N>`` subdir).
+
+        The compiled planes come from ``cache`` via the normal
+        :class:`_LivePlane` path, so restoring into a cache that is warm
+        for the plane shapes re-traces NOTHING (``PLANE_TRACES``-asserted
+        in the tests); pass no cache to (re)compile on first step.
+        """
+        from repro.checkpoint import solve as _ckpt
+
+        ck = _ckpt.SolveCheckpoint.load(path, step)
+        if ck.kind != "service":
+            raise _ckpt.CheckpointError(
+                f"{path} holds a {ck.kind!r} checkpoint; "
+                f"SolveService.restore needs a 'service' checkpoint"
+            )
+        svc = cls(
+            ck.problem, SolveConfig.from_dict(ck.config), cache=cache
+        )
+        meta = ck.meta
+        graphs = {
+            int(t): ck.unpack_graph(int(t)) for t in meta["graph_ns"]
+        }
+        for pi, pmeta in enumerate(meta["planes"]):
+            W, n_exact = pmeta["key"]
+            key = (int(W), None if n_exact is None else int(n_exact))
+            plane = _LivePlane(svc.spec, svc.config, svc.cache, key)
+            plane.lanes = lane_state_from_flat(ck.arrays, f"plane{pi}/lanes")
+            plane.datas = _ckpt.data_from_flat(ck.arrays, f"plane{pi}/datas")
+            if plane.use_fpt:
+                plane.fpt_bounds = jnp.asarray(ck.arrays[f"plane{pi}/fpt_bounds"])
+            plane.requests = [
+                None if m is None else _req_from_meta(m, graphs)
+                for m in pmeta["requests"]
+            ]
+            plane.admit_s = [float(a) for a in pmeta["admit_s"]]
+            svc._planes[key] = plane
+        for m in meta["queue"]:
+            svc.scheduler.push(_req_from_meta(m, graphs))
+        svc._results = {
+            int(t): SolveResult.from_dict(d)
+            for t, d in meta["results"].items()
+        }
+        svc._next_ticket = int(meta["next_ticket"])
+        svc._stats.update(meta["stats"])
+        return svc
 
     # -- internals -------------------------------------------------------------
 
@@ -436,13 +609,13 @@ class SolveService:
                 packed_status=self.config.packed_status,
             )
             res = from_engine_result(r, problem=self.spec.name, backend="spmd")
-            res.stats["service"] = {
-                "lane": lane,
-                "plane": str(plane.key),
-                "wait_s": plane.admit_s[lane] - req.submit_s,
-                "residency_s": now - plane.admit_s[lane],
-                "deadline_hit": evicted and req.deadline is not None,
-            }
+            res.stats.service = ServiceStats(
+                lane=lane,
+                plane=str(plane.key),
+                wait_s=plane.admit_s[lane] - req.submit_s,
+                residency_s=now - plane.admit_s[lane],
+                deadline_hit=evicted and req.deadline is not None,
+            )
             self._results[req.ticket] = res
             completed.append(req.ticket)
             self._stats["completed"] += 1

@@ -64,17 +64,97 @@ class SolverSession:
 
     # -- synchronous solves ----------------------------------------------------
 
-    def solve(self, g, **backend_kw) -> SolveResult:
+    def solve(
+        self,
+        g,
+        *,
+        checkpoint_dir: Optional[str] = None,
+        resume_from: Optional[str] = None,
+        **backend_kw,
+    ) -> SolveResult:
         """Solve one instance; ``backend_kw`` passes backend-specific extras
-        (spmd: ``initial_state``, ``mesh``)."""
+        (spmd: ``initial_state``, ``mesh``).
+
+        ``checkpoint_dir``/``resume_from`` override the config's durability
+        knobs for THIS call (spmd): periodic
+        :class:`~repro.checkpoint.solve.SolveCheckpoint` writes every
+        ``config.checkpoint_every`` chunks, and fingerprint-checked
+        restore-and-continue respectively.
+        """
         return self.backend.solve(
-            self.problem, g, self.config, self.cache, **backend_kw
+            self.problem,
+            g,
+            self._call_config(checkpoint_dir, resume_from),
+            self.cache,
+            **backend_kw,
         )
 
-    def solve_many(self, graphs) -> BatchSolveResult:
+    def solve_many(
+        self,
+        graphs,
+        *,
+        checkpoint_dir: Optional[str] = None,
+        resume_from: Optional[str] = None,
+    ) -> BatchSolveResult:
         return self.backend.solve_many(
-            self.problem, list(graphs), self.config, self.cache
+            self.problem,
+            list(graphs),
+            self._call_config(checkpoint_dir, resume_from),
+            self.cache,
         )
+
+    def _call_config(self, checkpoint_dir, resume_from) -> SolveConfig:
+        overrides = {
+            k: v
+            for k, v in (
+                ("checkpoint_dir", checkpoint_dir),
+                ("resume_from", resume_from),
+            )
+            if v is not None
+        }
+        return self.config.replace(**overrides) if overrides else self.config
+
+    @classmethod
+    def resume(
+        cls,
+        path: str,
+        *,
+        backend="spmd",
+        cache: Optional[PlaneCache] = None,
+        **config_overrides,
+    ) -> "SolveResult | BatchSolveResult":
+        """Resume a checkpointed solve to completion and return its result.
+
+        ``path`` is a checkpoint directory (latest step) or one
+        ``.../step_<N>`` subdir.  The session is rebuilt FROM the
+        checkpoint — problem, config and instance graphs are all stored in
+        it — then the solve continues from the snapshotted device state to
+        a final result bit-identical to the uninterrupted run (modulo
+        wall-clock).  ``config_overrides`` may adjust post-trajectory
+        knobs (``max_rounds``, ``checkpoint_dir``, ...); changing a
+        trajectory knob is refused by the fingerprint check.
+
+        Service checkpoints restore via
+        :meth:`repro.api.SolveService.restore` (they hold live lanes + a
+        queue, not one result).
+        """
+        from repro.checkpoint.solve import CheckpointError, SolveCheckpoint
+
+        ck = SolveCheckpoint.load(path)
+        if ck.kind == "service":
+            raise CheckpointError(
+                f"{path} holds a service checkpoint; use "
+                f"SolveService.restore(path)"
+            )
+        cfg = SolveConfig.from_dict(ck.config).replace(
+            resume_from=path, **config_overrides
+        )
+        session = cls(
+            problem=ck.problem, backend=backend, config=cfg, cache=cache
+        )
+        if ck.kind == "solo":
+            return session.solve(ck.unpack_graph(0))
+        return session.solve_many(ck.unpack_graphs())
 
     # -- asynchronous admission (the serving front) ----------------------------
 

@@ -4,4 +4,20 @@ from repro.checkpoint.store import (
     save_checkpoint,
 )
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+    "CheckpointError",
+    "SolveCheckpoint",
+]
+
+
+def __getattr__(name):
+    # the solve-plane schema names resolve lazily so the store's import
+    # graph stays independent of the schema module's
+    if name in ("CheckpointError", "SolveCheckpoint"):
+        from repro.checkpoint import solve
+
+        return getattr(solve, name)
+    raise AttributeError(name)

@@ -1,0 +1,294 @@
+"""Durable solve plane: the ``SolveCheckpoint`` schema over the store.
+
+:mod:`repro.checkpoint.store` is the IO layer (atomic tmp-dir swap, npz +
+msgpack manifest, async writes).  This module is the SCHEMA layer for the
+solve plane: what a checkpoint of a running solve *contains* and when a
+resume is *allowed*.
+
+A :class:`SolveCheckpoint` snapshots everything the host loop would need
+to reconstruct the exact device state at a chunk boundary:
+
+* ``arrays`` — the device pytree flattened to stable string names:
+  the :class:`~repro.core.superstep.WorkerState` (frontier task records in
+  the engine's packed-codec layout, best bounds, every carried stat
+  counter) or the :class:`~repro.core.superstep.LaneState` of a batched /
+  live plane, the batched :class:`~repro.problems.base.ProblemData`, FPT
+  bounds, and the instance graphs themselves (so a resume needs nothing
+  but the checkpoint);
+* ``rounds`` — the host progress counter at the boundary (the engine has
+  no host RNG: the round-robin donor salt is ``WorkerState.rounds`` and
+  the Algorithm-7 startup permutation is deterministic, so the device
+  arrays + this counter ARE the full trajectory state);
+* ``fingerprint`` — a digest of every config knob that shapes the solve
+  trajectory, plus the problem name and instance graphs.  Resuming under
+  a different fingerprint would silently produce a DIFFERENT solve, so it
+  refuses loudly (:func:`require_fingerprint`).  Post-trajectory knobs
+  (``max_rounds``, the checkpoint knobs themselves, simulator-only knobs)
+  are excluded: extending a budget on resume is legitimate.
+
+Corrupt, truncated or half-written checkpoints surface as
+:class:`CheckpointError` with the offending path — never a raw
+``zipfile``/``msgpack`` traceback, and never a silently wrong resume.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Optional
+
+import jax
+import msgpack
+import numpy as np
+
+from repro.checkpoint import store
+
+SCHEMA_VERSION = 1
+
+#: SolveConfig fields that determine the solve TRAJECTORY (branching
+#: decisions, transfer schedule, stats) — the fingerprint material.  Host
+#: budget/durability knobs and simulator-only knobs are deliberately
+#: absent: changing them on resume cannot change what the device computes.
+TRAJECTORY_FIELDS = (
+    "num_workers",
+    "steps_per_round",
+    "lanes",
+    "policy",
+    "codec",
+    "packed_status",
+    "skip_empty_transfer",
+    "transfer_impl",
+    "explore_impl",
+    "donate_k",
+    "chunk_rounds",
+    "mode",
+    "k",
+    "capacity",
+    "compact_threshold",
+    "service_lanes",
+    "admission",
+    "tenant_max_lanes",
+)
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be read/validated, or a resume was refused."""
+
+
+def graph_digest(g) -> str:
+    """Content digest of one instance graph (n + packed adjacency)."""
+    h = hashlib.sha256()
+    h.update(f"n={int(g.n)};".encode())
+    h.update(np.ascontiguousarray(np.asarray(g.adj, np.uint32)).tobytes())
+    return h.hexdigest()
+
+
+def config_fingerprint(kind: str, problem: str, cfg, graph_digests) -> str:
+    """Digest of (checkpoint kind, problem, trajectory knobs, instances)."""
+    knobs = {name: getattr(cfg, name) for name in TRAJECTORY_FIELDS}
+    if isinstance(knobs["k"], tuple):
+        knobs["k"] = list(knobs["k"])
+    blob = json.dumps(
+        {
+            "schema": SCHEMA_VERSION,
+            "kind": kind,
+            "problem": problem,
+            "knobs": knobs,
+            "graphs": list(graph_digests),
+        },
+        sort_keys=True,
+    )
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def require_fingerprint(ckpt: "SolveCheckpoint", expected: str, *, what: str) -> None:
+    if ckpt.fingerprint != expected:
+        raise CheckpointError(
+            f"config-fingerprint mismatch resuming {what}: the checkpoint "
+            f"was written under a different (problem, trajectory config, "
+            f"instances) — resuming would not reproduce the original solve. "
+            f"checkpoint fingerprint {ckpt.fingerprint[:12]}..., "
+            f"current {expected[:12]}...; align the trajectory knobs "
+            f"({', '.join(TRAJECTORY_FIELDS)}) and the instance graphs, or "
+            f"start a fresh solve"
+        )
+
+
+# -- the schema ----------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SolveCheckpoint:
+    """One resumable snapshot of a solve plane at a host-sync boundary.
+
+    ``kind`` is ``"solo"`` (one WorkerState), ``"many"`` (the in-flight
+    bucket's LaneState + finalized results so far) or ``"service"`` (every
+    live plane + the pending queue).  ``arrays`` maps stable names to
+    host/device arrays; ``meta`` holds the kind-specific JSON-able rest.
+    """
+
+    kind: str
+    problem: str
+    config: dict
+    fingerprint: str
+    rounds: int
+    arrays: dict
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    # -- write -----------------------------------------------------------------
+
+    def save(self, directory: str, step: int, *, blocking: bool = True) -> str:
+        """Atomic write through :func:`repro.checkpoint.store.save_checkpoint`
+        (unique tmp dir + rename — a kill mid-write never corrupts an
+        existing step)."""
+        extra = {
+            "schema": SCHEMA_VERSION,
+            "kind": self.kind,
+            "problem": self.problem,
+            "config": self.config,
+            "fingerprint": self.fingerprint,
+            "rounds": int(self.rounds),
+            "arrays": sorted(self.arrays),
+            "meta": self.meta,
+        }
+        return store.save_checkpoint(
+            directory, step, dict(self.arrays), extra, blocking=blocking
+        )
+
+    # -- read ------------------------------------------------------------------
+
+    @classmethod
+    def load(cls, path: str, step: Optional[int] = None) -> "SolveCheckpoint":
+        """Load from a checkpoint DIRECTORY (latest step, or ``step=``) or
+        directly from one ``.../step_<N>`` dir.  Corrupt/truncated data
+        raises :class:`CheckpointError` naming the path."""
+        directory, step = _resolve_step(path, step)
+        step_dir = os.path.join(directory, f"step_{step}")
+        try:
+            with open(os.path.join(step_dir, "manifest.msgpack"), "rb") as f:
+                manifest = msgpack.unpackb(f.read(), strict_map_key=False)
+            with np.load(os.path.join(step_dir, "arrays.npz")) as z:
+                raw = {k: z[k] for k in z.files}
+        except FileNotFoundError as e:
+            raise CheckpointError(
+                f"incomplete checkpoint at {step_dir}: missing {e.filename}"
+            ) from e
+        except Exception as e:
+            raise CheckpointError(
+                f"corrupt or truncated checkpoint at {step_dir}: {e}"
+            ) from e
+        extra = manifest.get("extra") or {}
+        if extra.get("schema") != SCHEMA_VERSION:
+            raise CheckpointError(
+                f"checkpoint at {step_dir} is not a solve checkpoint "
+                f"(schema {extra.get('schema')!r}, want {SCHEMA_VERSION}) — "
+                f"was it written by save_checkpoint directly?"
+            )
+        arrays = {}
+        for name in extra["arrays"]:
+            key = str(jax.tree_util.DictKey(name))
+            if key not in raw:
+                raise CheckpointError(
+                    f"corrupt checkpoint at {step_dir}: array {name!r} "
+                    f"listed in the manifest but absent from arrays.npz"
+                )
+            arrays[name] = raw[key]
+        return cls(
+            kind=extra["kind"],
+            problem=extra["problem"],
+            config=extra["config"],
+            fingerprint=extra["fingerprint"],
+            rounds=int(extra["rounds"]),
+            arrays=arrays,
+            meta=extra.get("meta") or {},
+        )
+
+    # -- graph round-trip ------------------------------------------------------
+
+    def pack_graphs(self, tags, graphs) -> None:
+        """Store instance graphs under ``graph/<tag>`` (+ per-tag n in meta)
+        so a resume is self-contained."""
+        ns = {}
+        for tag, g in zip(tags, graphs):
+            self.arrays[f"graph/{tag}"] = np.asarray(g.adj, np.uint32)
+            ns[str(tag)] = int(g.n)
+        self.meta["graph_ns"] = ns
+
+    def unpack_graph(self, tag):
+        from repro.graphs.bitgraph import BitGraph
+
+        return BitGraph(
+            n=self.meta["graph_ns"][str(tag)],
+            adj=np.asarray(self.arrays[f"graph/{tag}"], np.uint32),
+        )
+
+    def unpack_graphs(self) -> list:
+        """All stored graphs in tag order (tags are instance indices)."""
+        tags = sorted(int(t) for t in self.meta["graph_ns"])
+        return [self.unpack_graph(t) for t in tags]
+
+
+def _resolve_step(path: str, step: Optional[int]):
+    """(directory, step) from a checkpoint dir or a step_<N> subdir."""
+    base = os.path.basename(os.path.normpath(path))
+    if base.startswith("step_") and not base.endswith(".tmp"):
+        if step is not None:
+            raise ValueError("pass either a step_<N> path or step=, not both")
+        try:
+            return os.path.dirname(os.path.normpath(path)), int(base[5:])
+        except ValueError:
+            raise CheckpointError(f"malformed step directory name: {path}")
+    if step is None:
+        step = store.latest_step(path)
+        if step is None:
+            raise CheckpointError(f"no checkpoint found under {path}")
+    return path, step
+
+
+# -- EngineResult round-trip (solve_many finalizes results eagerly; the
+# finalized ones ride in the checkpoint meta so a resume never re-extracts
+# a lane that was already compacted away) --------------------------------------
+
+
+def engine_result_to_dict(r) -> dict:
+    d = dataclasses.asdict(r)
+    if r.best_sol is not None:
+        d["best_sol"] = [int(w) for w in np.asarray(r.best_sol, np.uint32)]
+    return d
+
+
+def engine_result_from_dict(d: dict):
+    from repro.core.engine import EngineResult
+
+    d = dict(d)
+    sol = d.get("best_sol")
+    d["best_sol"] = None if sol is None else np.asarray(sol, np.uint32)
+    return EngineResult(**d)
+
+
+# -- ProblemData (de)serialization --------------------------------------------
+
+
+def data_to_flat(data, prefix: str) -> dict:
+    """Batched :class:`~repro.problems.base.ProblemData` -> named arrays."""
+    return {
+        f"{prefix}.n": np.asarray(jax.device_get(data.n)),
+        f"{prefix}.adj": np.asarray(jax.device_get(data.adj)),
+        f"{prefix}.word_idx": np.asarray(jax.device_get(data.word_idx)),
+        f"{prefix}.bit_idx": np.asarray(jax.device_get(data.bit_idx)),
+    }
+
+
+def data_from_flat(flat: dict, prefix: str):
+    import jax.numpy as jnp
+
+    from repro.problems.base import ProblemData
+
+    return ProblemData(
+        n=jnp.asarray(flat[f"{prefix}.n"]),
+        adj=jnp.asarray(flat[f"{prefix}.adj"]),
+        word_idx=jnp.asarray(flat[f"{prefix}.word_idx"]),
+        bit_idx=jnp.asarray(flat[f"{prefix}.bit_idx"]),
+    )

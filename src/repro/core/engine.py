@@ -78,6 +78,11 @@ class EngineResult:
     transfer_rounds: int
     transfer_bytes_total: int
     transfer_bytes_per_round: float
+    # durability: how many SolveCheckpoints this run wrote, and the
+    # checkpoint path it restored from (None = started fresh).  Set by the
+    # host drivers in repro.api.backends, not by result extraction.
+    checkpoints_written: int = 0
+    resumed_from: Optional[str] = None
 
 
 def _scatter_startup(
@@ -153,7 +158,9 @@ def solve(
     process-wide plane cache, then returns the legacy ``EngineResult``.
     """
     warnings.warn(
-        "engine.solve is deprecated; use repro.api.SolverSession(...).solve",
+        "engine.solve is deprecated and will be REMOVED in v1.0; use "
+        "repro.api.SolverSession(...).solve (see the README migration "
+        "table: 'Migrating from the legacy engine API')",
         DeprecationWarning,
         stacklevel=2,
     )
@@ -387,8 +394,9 @@ def solve_many(
     exact size.
     """
     warnings.warn(
-        "engine.solve_many is deprecated; use "
-        "repro.api.SolverSession(...).solve_many",
+        "engine.solve_many is deprecated and will be REMOVED in v1.0; use "
+        "repro.api.SolverSession(...).solve_many (see the README migration "
+        "table: 'Migrating from the legacy engine API')",
         DeprecationWarning,
         stacklevel=2,
     )

@@ -857,6 +857,61 @@ def step_lanes(plane, datas, lanes: LaneState, fpt_bounds=None):
     )
 
 
+# -- checkpoint (de)serialization ----------------------------------------------
+#
+# The engine carries its ENTIRE trajectory state on device (frontier task
+# records, bounds, stats counters, the round-robin donor salt in `rounds`),
+# so a checkpoint is exactly these named arrays — flat stable names, one per
+# leaf, consumed by repro.checkpoint.solve.  Explicit field-by-field code
+# (not a generic tree flatten) so a schema change here is a visible,
+# reviewed change to the checkpoint format.
+
+
+def worker_state_to_flat(state: WorkerState, prefix: str = "worker") -> dict:
+    """A (possibly batched) :class:`WorkerState` as named host arrays."""
+    host = jax.device_get(state)
+    flat = {
+        f"{prefix}.frontier.{name}": np.asarray(leaf)
+        for name, leaf in host.frontier._asdict().items()
+    }
+    for name, leaf in host._asdict().items():
+        if name != "frontier":
+            flat[f"{prefix}.{name}"] = np.asarray(leaf)
+    return flat
+
+
+def worker_state_from_flat(flat: dict, prefix: str = "worker") -> WorkerState:
+    frontier = Frontier(
+        **{
+            name: jnp.asarray(flat[f"{prefix}.frontier.{name}"])
+            for name in Frontier._fields
+        }
+    )
+    rest = {
+        name: jnp.asarray(flat[f"{prefix}.{name}"])
+        for name in WorkerState._fields
+        if name != "frontier"
+    }
+    return WorkerState(frontier=frontier, **rest)
+
+
+def lane_state_to_flat(lanes: LaneState, prefix: str = "lanes") -> dict:
+    flat = worker_state_to_flat(lanes.worker, f"{prefix}.worker")
+    flat[f"{prefix}.done"] = np.asarray(jax.device_get(lanes.done))
+    flat[f"{prefix}.tag"] = np.asarray(lanes.tag, np.int32)
+    flat[f"{prefix}.rounds"] = np.asarray(jax.device_get(lanes.rounds))
+    return flat
+
+
+def lane_state_from_flat(flat: dict, prefix: str = "lanes") -> LaneState:
+    return LaneState(
+        worker=worker_state_from_flat(flat, f"{prefix}.worker"),
+        done=jnp.asarray(flat[f"{prefix}.done"]),
+        tag=np.asarray(flat[f"{prefix}.tag"], np.int32),
+        rounds=jnp.asarray(flat[f"{prefix}.rounds"]),
+    )
+
+
 def build_batch_superstep_fn(
     problem: BranchingProblem,
     datas: ProblemData,

@@ -53,8 +53,19 @@ async def run_service(args, reqs) -> dict:
         chunk_rounds=args.chunk_rounds,
         service_lanes=args.lanes,
         admission=args.admission,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
     )
-    service = SolveService(args.problem, cfg)
+    leftover = []
+    if args.resume:
+        # restore live lanes + pending queue from a service checkpoint;
+        # its tickets finish alongside the fresh synthetic stream
+        service = SolveService.restore(args.resume)
+        leftover = service.tickets()
+        print(f"[serve] restored {args.resume}: {len(leftover)} "
+              f"in-flight/queued tickets resume")
+    else:
+        service = SolveService(args.problem, cfg)
     latencies = []
     t0 = time.perf_counter()
 
@@ -70,11 +81,21 @@ async def run_service(args, reqs) -> dict:
 
     async with AsyncSolveService(service) as svc:
         results = await asyncio.gather(*(one(a, g) for a, g in reqs))
+    # the restored checkpoint's own tickets may still be in flight; finish
+    # them so a killed-and-restarted service completes everything admitted
+    resumed_results = {}
+    if leftover:
+        service.drain()
+        resumed_results = {t: service.result(t) for t in leftover}
     wall = time.perf_counter() - t0
 
     lat = np.array(sorted(latencies))
     stats = service.stats()
     return {
+        "resumed_tickets": len(resumed_results),
+        "resumed_best_sizes": [
+            resumed_results[t].best_size for t in sorted(resumed_results)
+        ],
         "requests": len(reqs),
         "wall_s": wall,
         "instances_per_s": len(reqs) / wall,
@@ -106,6 +127,13 @@ def main():
     ap.add_argument("--admission", choices=("fifo", "priority"),
                     default="priority")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="auto-checkpoint the live service (lanes + queue) "
+                         "every --checkpoint-every steps")
+    ap.add_argument("--checkpoint-every", type=int, default=8)
+    ap.add_argument("--resume", default=None, metavar="DIR",
+                    help="restore a service checkpoint first; its in-flight "
+                         "and queued tickets finish alongside the new stream")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny settings for CI")
     ap.add_argument("--json", action="store_true",
@@ -130,6 +158,8 @@ def main():
             f"{out['latency_p50_s']*1e3:.0f}ms p99 "
             f"{out['latency_p99_s']*1e3:.0f}ms, plane occupancy "
             f"{out['occupancy']:.2f}, evicted {out['evicted']}"
+            + (f", resumed {out['resumed_tickets']} checkpointed tickets"
+               if out["resumed_tickets"] else "")
         )
         print(f"[serve] cache: {out['cache']}")
 

@@ -91,6 +91,8 @@ CONFIG_FLAGS = {
     "mode": "mode",
     "k": "k",
     "latency": "latency",
+    "checkpoint_dir": "checkpoint_dir",
+    "checkpoint_every": "checkpoint_every",
 }
 
 
@@ -105,6 +107,31 @@ def effective_config(args):
         if dest in CONFIG_FLAGS
     }
     return base.replace(**provided) if provided else base
+
+
+def resume_solve(args):
+    """--resume DIR: rebuild the session FROM the checkpoint (problem,
+    config, graphs all live in it) and run to completion.  Explicit CLI
+    flags act as config overrides; the fingerprint check refuses any that
+    would change the solve trajectory."""
+    from repro.api import BatchSolveResult, SolverSession
+
+    overrides = {
+        CONFIG_FLAGS[dest]: value
+        for dest, value in vars(args).items()
+        if dest in CONFIG_FLAGS
+    }
+    res = SolverSession.resume(args.resume, **overrides)
+    if isinstance(res, BatchSolveResult):
+        for i, r in enumerate(res.results):
+            print(f"[solve]   instance {i}: best={r.best_size} "
+                  f"rounds={r.rounds} nodes={r.nodes_expanded}")
+        print(f"[solve] resumed batch from {args.resume}: "
+              f"{len(res.results)} instances in {res.wall_s:.2f}s")
+    else:
+        print(f"[solve] resumed from {args.resume}: best={res.best_size} "
+              f"rounds={res.rounds} nodes={res.nodes_expanded} "
+              f"wall={res.wall_s:.2f}s")
 
 
 def main():
@@ -159,7 +186,20 @@ def main():
     ap.add_argument("--k", type=int, default=S)
     ap.add_argument("--latency", type=int, default=S,
                     help="simulator message latency in ticks")
+    ap.add_argument("--checkpoint-dir", default=S, metavar="DIR",
+                    help="write a resumable SolveCheckpoint every "
+                         "--checkpoint-every chunks (spmd)")
+    ap.add_argument("--checkpoint-every", type=int, default=S,
+                    help="chunks between checkpoint writes (default 8)")
+    ap.add_argument("--resume", default=None, metavar="DIR",
+                    help="resume a checkpointed solve (dir or step_N subdir); "
+                         "problem/config/graphs come from the checkpoint, "
+                         "explicit flags override non-trajectory knobs")
     args = ap.parse_args()
+
+    if args.resume:
+        resume_solve(args)
+        return
 
     # one validation pass: config knobs, problem and backend names all fail
     # with the list of valid values, not a deep KeyError
@@ -212,16 +252,18 @@ def main():
             f"wall={r.wall_s:.2f}s")
     s = r.stats
     if backend.name == "spmd":
-        line += (f" overflow={s['overflow']} "
-                 f"control_B/round={s['control_bytes_per_round']} "
-                 f"transfer_B/round={s['transfer_bytes_per_round']:.1f} "
-                 f"(total {s['transfer_bytes_total']}B over "
-                 f"{s['transfer_rounds']} transfer rounds, "
+        line += (f" overflow={s.overflow} "
+                 f"control_B/round={s.control_bytes_per_round} "
+                 f"transfer_B/round={s.transfer_bytes_per_round:.1f} "
+                 f"(total {s.transfer_bytes_total}B over "
+                 f"{s.transfer_rounds} transfer rounds, "
                  f"{cfg.transfer_impl})")
+        if s.checkpoints_written:
+            line += f" checkpoints={s.checkpoints_written}"
     elif backend.name in ("protocol_sim", "centralized"):
-        line += (f" bytes={s['total_bytes']}"
-                 + (f" (center {s['center_bytes']})"
-                    f" failed_requests={s['failed_requests']}"
+        line += (f" bytes={s.total_bytes}"
+                 + (f" (center {s.center_bytes})"
+                    f" failed_requests={s.failed_requests}"
                     if backend.name == "protocol_sim" else ""))
     print(line)
 

@@ -133,10 +133,15 @@ PUBLIC_API = [
     "Backend",
     "BatchSolveResult",
     "CacheStats",
+    "CheckpointError",
+    "LaneStats",
     "PlaneCache",
+    "ServiceStats",
+    "SolveCheckpoint",
     "SolveConfig",
     "SolveResult",
     "SolveService",
+    "SolveStats",
     "SolverSession",
     "get_backend",
     "known_backends",
@@ -172,6 +177,8 @@ SOLVE_CONFIG_FIELDS = [
     "admission",
     "batch_size",
     "capacity",
+    "checkpoint_dir",
+    "checkpoint_every",
     "chunk_rounds",
     "codec",
     "compact_threshold",
@@ -187,6 +194,7 @@ SOLVE_CONFIG_FIELDS = [
     "packed_status",
     "policy",
     "queue_cap_per_p",
+    "resume_from",
     "seed",
     "send_metadata",
     "service_lanes",
@@ -215,3 +223,67 @@ def test_solve_config_field_snapshot():
     # path stays reachable for A/B
     assert cfg.explore_impl == "fused"
     assert cfg.transfer_impl == "sparse"
+
+
+# Field snapshots of the typed stats schema (PR-7): every backend writes into
+# ONE SolveStats shape, so renaming/dropping a counter is a schema change every
+# consumer sees — pin it like the config.
+SOLVE_STATS_FIELDS = [
+    "center_bytes",
+    "checkpoints_written",
+    "control_bytes_per_round",
+    "failed_requests",
+    "max_depth",
+    "msg_bytes",
+    "msg_count",
+    "overflow",
+    "overflow_count",
+    "pruned",
+    "resumed_from",
+    "service",
+    "solutions",
+    "termination_cancelled",
+    "ticks",
+    "total_bytes",
+    "transfer_bytes_per_round",
+    "transfer_bytes_total",
+    "transfer_rounds",
+]
+SERVICE_STATS_FIELDS = ["deadline_hit", "lane", "plane", "residency_s", "wait_s"]
+LANE_STATS_FIELDS = ["chunk_calls", "lane_chunks", "live_lane_chunks", "occupancy"]
+
+
+def test_stats_schema_field_snapshots():
+    import dataclasses
+
+    from repro.api import LaneStats, ServiceStats, SolveStats
+
+    for cls, want in (
+        (SolveStats, SOLVE_STATS_FIELDS),
+        (ServiceStats, SERVICE_STATS_FIELDS),
+        (LaneStats, LANE_STATS_FIELDS),
+    ):
+        assert sorted(f.name for f in dataclasses.fields(cls)) == want, (
+            f"{cls.__name__} fields drifted from the pinned snapshot — if "
+            f"intentional, update tests/test_arch_guard.py and the README"
+        )
+
+
+def test_stats_dict_access_shim_warns_and_delegates():
+    """Legacy ``r.stats["overflow"]`` keeps working through the deprecation
+    shim — but warns, and ``to_dict()`` stays the warning-free export."""
+    import warnings
+
+    import pytest
+
+    from repro.api import SolveStats
+
+    s = SolveStats(overflow_count=3)
+    with pytest.warns(DeprecationWarning, match="dict-style access"):
+        assert s["overflow_count"] == 3
+    with pytest.warns(DeprecationWarning):
+        assert "overflow" in s and s.get("missing", 7) == 7
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # attribute + to_dict never warn
+        assert s.overflow_count == 3
+        assert s.to_dict()["overflow_count"] == 3

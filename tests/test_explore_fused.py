@@ -49,9 +49,9 @@ def _check_golden(r, want: dict):
         "rounds": int(r.rounds),
         "nodes_expanded": int(r.nodes_expanded),
         "tasks_transferred": int(r.tasks_transferred),
-        "transfer_rounds": int(r.stats["transfer_rounds"]),
-        "transfer_bytes_total": int(r.stats["transfer_bytes_total"]),
-        "overflow": bool(r.stats["overflow"]),
+        "transfer_rounds": int(r.stats.transfer_rounds),
+        "transfer_bytes_total": int(r.stats.transfer_bytes_total),
+        "overflow": bool(r.stats.overflow),
     }
     assert got == want
 
@@ -113,7 +113,7 @@ def _result_key(r):
         r.rounds,
         r.nodes_expanded,
         r.tasks_transferred,
-        int(r.stats["overflow_count"]),
+        int(r.stats.overflow_count),
     )
 
 
@@ -260,13 +260,13 @@ def test_overflow_count_surfaces_in_solve_result():
         problem="vertex_cover",
         config=SolveConfig(num_workers=4, steps_per_round=8),
     ).solve(g)
-    assert ok.stats["overflow_count"] == 0 and not ok.stats["overflow"]
+    assert ok.stats.overflow_count == 0 and not ok.stats.overflow
     starved = SolverSession(
         problem="vertex_cover",
         config=SolveConfig(num_workers=4, steps_per_round=8, capacity=2),
     ).solve(g)
-    assert starved.stats["overflow"]
-    assert starved.stats["overflow_count"] > 0
+    assert starved.stats.overflow
+    assert starved.stats.overflow_count > 0
 
 
 # -- 4. cheap frontier pop == reference top_k pop ------------------------------

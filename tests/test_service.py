@@ -52,9 +52,9 @@ def _check_golden(r, want: dict):
         "rounds": int(r.rounds),
         "nodes_expanded": int(r.nodes_expanded),
         "tasks_transferred": int(r.tasks_transferred),
-        "transfer_rounds": int(r.stats["transfer_rounds"]),
-        "transfer_bytes_total": int(r.stats["transfer_bytes_total"]),
-        "overflow": bool(r.stats["overflow"]),
+        "transfer_rounds": int(r.stats.transfer_rounds),
+        "transfer_bytes_total": int(r.stats.transfer_bytes_total),
+        "overflow": bool(r.stats.overflow),
     }
     assert got == want
 
@@ -114,7 +114,7 @@ def test_service_churn_matches_solo_across_sizes():
         assert r.rounds == solo.rounds
         assert r.nodes_expanded == solo.nodes_expanded
         assert r.tasks_transferred == solo.tasks_transferred
-        assert r.stats["transfer_bytes_total"] == solo.stats["transfer_bytes_total"]
+        assert r.stats.transfer_bytes_total == solo.stats.transfer_bytes_total
         assert (np.asarray(r.best_sol) == np.asarray(solo.best_sol)).all()
 
 
@@ -191,13 +191,13 @@ def test_overflow_count_propagates_into_streamed_results():
     )
     g = erdos_renyi(26, 0.3, 0)
     solo = SolverSession(problem="vertex_cover", config=cfg).solve(g)
-    assert solo.stats["overflow_count"] > 0  # the config really starves
+    assert solo.stats.overflow_count > 0  # the config really starves
     svc = SolveService("vertex_cover", cfg)
     t = svc.submit(g)
     svc.drain()
     r = svc.result(t)
-    assert r.stats["overflow_count"] == solo.stats["overflow_count"]
-    assert r.stats["overflow"] and r.best_size == solo.best_size
+    assert r.stats.overflow_count == solo.stats.overflow_count
+    assert r.stats.overflow and r.best_size == solo.best_size
 
 
 def test_deadline_evicts_with_anytime_result():
@@ -209,7 +209,7 @@ def test_deadline_evicts_with_anytime_result():
     t = svc.submit(g, deadline=1)
     svc.drain()
     r = svc.result(t)
-    assert r.stats["service"]["deadline_hit"] is True
+    assert r.stats.service.deadline_hit is True
     assert r.rounds == 1  # stopped at the budget, not at optimality
     assert svc.stats()["evicted"] == 1
     # the anytime answer is a valid-but-possibly-loose bound vs full solve
@@ -219,7 +219,7 @@ def test_deadline_evicts_with_anytime_result():
     svc2 = SolveService("vertex_cover", cfg)
     t2 = svc2.submit(erdos_renyi(12, 0.3, 1), deadline=500)
     svc2.drain()
-    assert svc2.result(t2).stats["service"]["deadline_hit"] is False
+    assert svc2.result(t2).stats.service.deadline_hit is False
 
 
 def test_submit_validation():

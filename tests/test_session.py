@@ -53,9 +53,9 @@ def _check_golden(r: SolveResult, want: dict):
         "rounds": int(r.rounds),
         "nodes_expanded": int(r.nodes_expanded),
         "tasks_transferred": int(r.tasks_transferred),
-        "transfer_rounds": int(r.stats["transfer_rounds"]),
-        "transfer_bytes_total": int(r.stats["transfer_bytes_total"]),
-        "overflow": bool(r.stats["overflow"]),
+        "transfer_rounds": int(r.stats.transfer_rounds),
+        "transfer_bytes_total": int(r.stats.transfer_bytes_total),
+        "overflow": bool(r.stats.overflow),
     }
     assert got == want
 

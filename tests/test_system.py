@@ -2,8 +2,8 @@
 paper's workload, and the engine survives a mid-run elastic resize.  (The
 per-component suites live in the sibling test modules.)"""
 
+from repro.api import SolveConfig, SolverSession
 from repro.core.centralized import run_centralized_sim
-from repro.core.engine import solve
 from repro.core.protocol_sim import run_protocol_sim
 from repro.graphs.generators import p_hat_like
 from repro.problems.sequential import solve_sequential, verify_cover
@@ -14,7 +14,8 @@ def test_three_schedulers_agree():
     want, _, _ = solve_sequential(g)
     semi = run_protocol_sim(g, num_workers=4)
     cent = run_centralized_sim(g, num_workers=4)
-    spmd = solve(g, num_workers=4, steps_per_round=8)
+    cfg = SolveConfig(num_workers=4, steps_per_round=8)
+    spmd = SolverSession(config=cfg).solve(g)
     assert semi.best_size == cent.best_size == spmd.best_size == want
     assert verify_cover(g, spmd.best_sol)
     # the paper's headline guarantee
