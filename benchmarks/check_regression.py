@@ -1,0 +1,120 @@
+"""Gate a smoke-benchmark run against the committed baseline.
+
+``benchmarks/baseline.json`` pins, per benchmark, what a healthy run looks
+like — exact values for deterministic outputs (encoded record bytes,
+golden clique sizes, the plane-trace count), floors/ceilings with a
+tolerance band for anything wall-clock-derived (throughput speedups drift
+with machine load, so those gate loosely).  CI runs::
+
+    PYTHONPATH=src python -m benchmarks.run --smoke
+    PYTHONPATH=src python -m benchmarks.check_regression
+
+and fails the job on any violated pin.  Update baseline.json (a reviewed,
+committed file) when a PR legitimately moves a pinned number.
+
+Rule schema, per ``benchmarks.<name>.checks[]``:
+
+  {"path": "rows.0.optimized_bytes", "eq": 36}          exact match
+  {"path": "warm_speedup",           "min": 5.0}        floor
+  {"path": "wall_ratio",             "max": 1.5}        ceiling
+  {"path": "gate_speedup", "min": 1.81, "rtol": 0.35}   floor with slack:
+      effective floor = min * (1 - rtol)
+
+Missing benchmark entries fail (a silently skipped gate is a regression
+too); extra benchmarks in the run are ignored.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+HERE = os.path.dirname(__file__)
+BASELINE = os.path.join(HERE, "baseline.json")
+SMOKE = os.path.join(HERE, "out", "BENCH_smoke.json")
+
+
+def _lookup(entry, path: str):
+    cur = entry
+    for part in path.split("."):
+        if isinstance(cur, list):
+            cur = cur[int(part)]
+        elif isinstance(cur, dict):
+            cur = cur[part]
+        else:
+            raise KeyError(path)
+    return cur
+
+
+def check(baseline: dict, smoke: dict) -> list:
+    """All violations as human-readable strings (empty == green)."""
+    problems = []
+    ran = smoke.get("benchmarks", {})
+    for name, spec in baseline["benchmarks"].items():
+        entry = ran.get(name)
+        if entry is None:
+            problems.append(f"{name}: missing from the smoke run")
+            continue
+        for rule in spec["checks"]:
+            path = rule["path"]
+            try:
+                got = _lookup(entry, path)
+            except (KeyError, IndexError, ValueError):
+                problems.append(f"{name}.{path}: missing from the run")
+                continue
+            if "eq" in rule and got != rule["eq"]:
+                problems.append(
+                    f"{name}.{path}: {got!r} != pinned {rule['eq']!r}"
+                )
+            if "min" in rule:
+                floor = rule["min"] * (1.0 - rule.get("rtol", 0.0))
+                if got < floor:
+                    problems.append(
+                        f"{name}.{path}: {got} below floor {floor:g} "
+                        f"(baseline {rule['min']}, rtol {rule.get('rtol', 0)})"
+                    )
+            if "max" in rule:
+                ceil = rule["max"] * (1.0 + rule.get("rtol", 0.0))
+                if got > ceil:
+                    problems.append(
+                        f"{name}.{path}: {got} above ceiling {ceil:g} "
+                        f"(baseline {rule['max']}, rtol {rule.get('rtol', 0)})"
+                    )
+    return problems
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="benchmarks.check_regression")
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--smoke", default=SMOKE)
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    try:
+        with open(args.smoke) as f:
+            smoke = json.load(f)
+    except FileNotFoundError:
+        print(
+            f"no smoke run at {args.smoke} — run "
+            f"`PYTHONPATH=src python -m benchmarks.run --smoke` first",
+            file=sys.stderr,
+        )
+        raise SystemExit(2)
+
+    problems = check(baseline, smoke)
+    n_checks = sum(
+        len(s["checks"]) for s in baseline["benchmarks"].values()
+    )
+    if problems:
+        print(f"REGRESSION: {len(problems)} of {n_checks} pins violated:")
+        for p in problems:
+            print(f"  - {p}")
+        raise SystemExit(1)
+    print(f"bench-smoke within baseline ({n_checks} pins green)")
+
+
+if __name__ == "__main__":
+    main()

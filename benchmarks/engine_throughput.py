@@ -103,7 +103,7 @@ def chunked_ab(P=64, K=32, R=96, n=32, seed=1):
         def device_rate():
             s, t0, ran_tot = s0, time.perf_counter(), 0
             while ran_tot < R:
-                s, d, ran = chunk_fn(s)
+                s, d, ran, _hot = chunk_fn(s)
                 d, ran = jax.device_get((d, ran))
                 ran_tot += int(ran)
                 if bool(d):

@@ -9,9 +9,15 @@ survivors via :meth:`SolverSession.resume` — asserting the final result is
 bit-identical to the baseline (modulo wall-clock and the durability
 counters, which are outside the contract).
 
+A second kill cycle runs the same contract MID-SPILL: a saturating
+``frontier_spill`` solve whose checkpoints carry a non-empty cold tier —
+the resumed solve must land bit-identically INCLUDING the spill counters
+(``spilled_tasks`` / ``readmitted_tasks``), proving the host cold tier
+survives a SIGKILL at any chunk boundary.
+
 Also records the §H durability overheads for EXPERIMENTS.md /
-RESUME_smoke.json: checkpoint write cost (checkpointed vs plain solve wall),
-on-disk checkpoint size, and resume latency.
+benchmarks/out/RESUME_smoke.json: checkpoint write cost (checkpointed vs
+plain solve wall), on-disk checkpoint size, and resume latency.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.resume_smoke           # full
@@ -32,13 +38,23 @@ import time
 
 import numpy as np
 
-RESUME_JSON = "RESUME_smoke.json"
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+RESUME_JSON = os.path.join(OUT_DIR, "RESUME_smoke.json")
 
-# the one deterministic workload both processes build (seeded generator)
-def _workload(smoke: bool):
+# the one deterministic workload both processes build (seeded generator);
+# the spill variant pins a saturating capacity so checkpoints mid-solve
+# carry a non-empty cold tier
+def _workload(smoke: bool, spill: bool = False):
     from repro.api import SolveConfig
     from repro.graphs.generators import erdos_renyi
 
+    if spill:
+        g = erdos_renyi(40, 0.28, seed=0)
+        cfg = SolveConfig(
+            num_workers=4, steps_per_round=2, chunk_rounds=2, capacity=16,
+            frontier_spill=True, checkpoint_every=1,
+        )
+        return g, cfg
     n = 36 if smoke else 40
     g = erdos_renyi(n, 0.25, seed=3)
     cfg = SolveConfig(
@@ -47,10 +63,10 @@ def _workload(smoke: bool):
     return g, cfg
 
 
-def _child(ckpt_dir: str, smoke: bool) -> None:
+def _child(ckpt_dir: str, smoke: bool, spill: bool = False) -> None:
     from repro.api import SolverSession
 
-    g, cfg = _workload(smoke)
+    g, cfg = _workload(smoke, spill)
     SolverSession(config=cfg).solve(g, checkpoint_dir=ckpt_dir)
 
 
@@ -59,6 +75,48 @@ def _dir_bytes(d: str) -> int:
     for root, _, files in os.walk(d):
         total += sum(os.path.getsize(os.path.join(root, f)) for f in files)
     return total
+
+
+def _kill_and_resume(smoke: bool, cache, spill: bool = False):
+    """Launch the checkpointing child, SIGKILL it at the first durable
+    step, resume from the survivors.  Returns (resumed_result,
+    killed_at_step, killed_mid_solve, resume_wall_s)."""
+    from repro.api import SolverSession
+    from repro.checkpoint.store import latest_step
+
+    d = tempfile.mkdtemp(prefix="resume_smoke_kill_")
+    try:
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "benchmarks.resume_smoke",
+             "--child", "--dir", d]
+            + (["--smoke"] if smoke else [])
+            + (["--spill"] if spill else []),
+            env={**os.environ, "PYTHONPATH": "src"},
+        )
+        deadline = time.time() + 300
+        killed_mid_solve = False
+        while time.time() < deadline:
+            if latest_step(d) is not None:
+                proc.send_signal(signal.SIGKILL)
+                proc.wait()
+                killed_mid_solve = True
+                break
+            if proc.poll() is not None:
+                break  # solved before the first checkpoint landed
+            time.sleep(0.05)
+        else:
+            proc.kill()
+            proc.wait()
+            raise RuntimeError("child produced no checkpoint within 300s")
+        step = latest_step(d)
+        assert step is not None, "no checkpoint survived the kill"
+
+        t0 = time.perf_counter()
+        resumed = SolverSession.resume(d, cache=cache, checkpoint_dir=None)
+        resume_wall = time.perf_counter() - t0
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    return resumed, step, killed_mid_solve, resume_wall
 
 
 def run(smoke: bool = False) -> dict:
@@ -88,37 +146,9 @@ def run(smoke: bool = False) -> dict:
     finally:
         shutil.rmtree(d_cost, ignore_errors=True)
 
-    # the kill: child checkpoints to disk, parent SIGKILLs it mid-solve
-    d = tempfile.mkdtemp(prefix="resume_smoke_kill_")
-    try:
-        proc = subprocess.Popen(
-            [sys.executable, "-m", "benchmarks.resume_smoke",
-             "--child", "--dir", d] + (["--smoke"] if smoke else []),
-            env={**os.environ, "PYTHONPATH": "src"},
-        )
-        deadline = time.time() + 300
-        killed_mid_solve = False
-        while time.time() < deadline:
-            if latest_step(d) is not None:
-                proc.send_signal(signal.SIGKILL)
-                proc.wait()
-                killed_mid_solve = True
-                break
-            if proc.poll() is not None:
-                break  # solved before the first checkpoint landed
-            time.sleep(0.05)
-        else:
-            proc.kill()
-            proc.wait()
-            raise RuntimeError("child produced no checkpoint within 300s")
-        step = latest_step(d)
-        assert step is not None, "no checkpoint survived the kill"
-
-        t0 = time.perf_counter()
-        resumed = SolverSession.resume(d, cache=cache, checkpoint_dir=None)
-        resume_wall = time.perf_counter() - t0
-    finally:
-        shutil.rmtree(d, ignore_errors=True)
+    resumed, step, killed_mid_solve, resume_wall = _kill_and_resume(
+        smoke, cache
+    )
 
     # bit-identity vs the uninterrupted baseline (wall_s and the durability
     # counters are explicitly outside the contract)
@@ -128,6 +158,26 @@ def run(smoke: bool = False) -> dict:
     assert resumed.tasks_transferred == base.tasks_transferred
     assert resumed.stats.transfer_bytes_total == base.stats.transfer_bytes_total
     assert (np.asarray(resumed.best_sol) == np.asarray(base.best_sol)).all()
+
+    # second cycle: SIGKILL with a live cold tier (frontier_spill on a
+    # saturating capacity) — resume must replay the spill pump exactly
+    g_sp, cfg_sp = _workload(smoke, spill=True)
+    base_sp = SolverSession(
+        problem="vertex_cover", config=cfg_sp, cache=cache
+    ).solve(g_sp)
+    assert base_sp.stats.spilled_tasks > 0, (
+        "spill workload no longer saturates — retune _workload(spill=True)"
+    )
+    res_sp, sp_step, sp_killed, _ = _kill_and_resume(smoke, cache, spill=True)
+    assert res_sp.best_size == base_sp.best_size
+    assert res_sp.rounds == base_sp.rounds
+    assert res_sp.nodes_expanded == base_sp.nodes_expanded
+    assert (
+        np.asarray(res_sp.best_sol) == np.asarray(base_sp.best_sol)
+    ).all()
+    assert res_sp.stats.spilled_tasks == base_sp.stats.spilled_tasks
+    assert res_sp.stats.readmitted_tasks == base_sp.stats.readmitted_tasks
+    assert res_sp.stats.overflow_count == 0 and not res_sp.stats.overflow
 
     out = dict(
         n=g.n,
@@ -144,6 +194,12 @@ def run(smoke: bool = False) -> dict:
         checkpoints_written=int(writes),
         checkpoint_bytes=int(ckpt_bytes),
         resume_wall_s=round(resume_wall, 3),
+        spill_killed_at_step=int(sp_step),
+        spill_killed_mid_solve=sp_killed,
+        spill_resumed_best=int(res_sp.best_size),
+        spill_spilled_tasks=int(res_sp.stats.spilled_tasks),
+        spill_readmitted_tasks=int(res_sp.stats.readmitted_tasks),
+        spill_bit_identical=True,
     )
     print(
         f"kill-and-resume: SIGKILL at step {step} "
@@ -153,6 +209,13 @@ def run(smoke: bool = False) -> dict:
         f"{out['checkpoint_overhead_pct']}% at every-chunk cadence, resume "
         f"{out['resume_wall_s']}s"
     )
+    print(
+        f"mid-spill kill: SIGKILL at step {sp_step} with a live cold tier, "
+        f"resume bit-identical (best={out['spill_resumed_best']}, "
+        f"{out['spill_spilled_tasks']} spilled / "
+        f"{out['spill_readmitted_tasks']} readmitted, 0 dropped)"
+    )
+    os.makedirs(OUT_DIR, exist_ok=True)
     with open(RESUME_JSON, "w") as f:
         json.dump(out, f, indent=2)
         f.write("\n")
@@ -165,9 +228,10 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--dir", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--spill", action="store_true", help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
     if args.child:
-        _child(args.dir, args.smoke)
+        _child(args.dir, args.smoke, args.spill)
     else:
         run(args.smoke)
 

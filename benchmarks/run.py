@@ -9,6 +9,7 @@
   session_warm      cold-vs-warm SolverSession (compiled-plane cache gate)
   explore_throughput fused vs reference exploration plane, nodes/sec (gated)
   serve_load        continuous-admission service vs fixed batching (gated)
+  spill_throughput  hierarchical frontier memory: no-drop + wall gate
   resume_smoke      SIGKILL mid-solve + bit-identical resume (durability gate)
   balancer_bench    beyond-paper serving balancer
   kernel_bench      kernel arithmetic-intensity table
@@ -17,8 +18,9 @@ Usage:  PYTHONPATH=src python -m benchmarks.run [--smoke] [name ...]
 
 ``--smoke`` runs shrunken versions of the smoke-capable benchmarks (the
 default name set becomes SMOKE_DEFAULT) and records every dict a benchmark
-returns in BENCH_smoke.json — the per-PR perf trajectory the CI bench-smoke
-job uploads as an artifact.  Every recorded entry is tagged with the
+returns in benchmarks/out/BENCH_smoke.json — the per-PR perf trajectory the
+CI bench-smoke job uploads as an artifact and ``benchmarks.check_regression``
+compares against the committed ``benchmarks/baseline.json``.  Every recorded entry is tagged with the
 branching problem it exercised (``problem``; vertex_cover unless the
 benchmark says otherwise).
 """
@@ -26,6 +28,7 @@ benchmark says otherwise).
 import argparse
 import inspect
 import json
+import os
 import sys
 import time
 
@@ -42,6 +45,7 @@ from benchmarks import (
     serve_load,
     session_warm,
     speedup,
+    spill_throughput,
 )
 
 ALL = {
@@ -53,6 +57,7 @@ ALL = {
     "session_warm": session_warm,
     "explore_throughput": explore_throughput,
     "serve_load": serve_load,
+    "spill_throughput": spill_throughput,
     "resume_smoke": resume_smoke,
     "balancer_bench": balancer_bench,
     "kernel_bench": kernel_bench,
@@ -62,10 +67,13 @@ ALL = {
 # kept fast enough for a per-PR CI job; full runs remain opt-in by name
 SMOKE_DEFAULT = (
     "encoding_bytes", "batch_throughput", "clique_smoke", "session_warm",
-    "explore_throughput", "serve_load",
+    "explore_throughput", "serve_load", "spill_throughput",
 )
 
-SMOKE_JSON = "BENCH_smoke.json"
+# generated artifacts live under benchmarks/out/ (gitignored); only the
+# reviewed baseline.json is committed
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+SMOKE_JSON = os.path.join(OUT_DIR, "BENCH_smoke.json")
 
 
 def main(argv=None) -> None:
@@ -110,6 +118,7 @@ def main(argv=None) -> None:
             recorded[name] = entry
 
     if args.smoke:
+        os.makedirs(OUT_DIR, exist_ok=True)
         with open(SMOKE_JSON, "w") as f:
             json.dump({"smoke": True, "benchmarks": recorded}, f, indent=2)
             f.write("\n")

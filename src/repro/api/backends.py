@@ -58,7 +58,9 @@ def _solo_fingerprint(spec, g, cfg):
     )
 
 
-def _write_solo_checkpoint(spec, g, cfg, fingerprint, state, rounds) -> None:
+def _write_solo_checkpoint(
+    spec, g, cfg, fingerprint, state, rounds, spill=None
+) -> None:
     """One atomic SolveCheckpoint of a solo solve at a chunk boundary."""
     from repro.checkpoint import solve as _ckpt
     from repro.core.superstep import worker_state_to_flat
@@ -71,6 +73,8 @@ def _write_solo_checkpoint(spec, g, cfg, fingerprint, state, rounds) -> None:
         rounds=rounds,
         arrays=worker_state_to_flat(state),
     )
+    if spill is not None:
+        ck.arrays.update(spill.to_flat())
     ck.pack_graphs([0], [g])
     ck.save(cfg.checkpoint_dir, rounds)
 
@@ -110,6 +114,7 @@ def solve_spmd(
     )
     rounds = 0
     resumed_from = None
+    resume_arrays = None
     if cfg.resume_from is not None:
         if initial_state is not None:
             raise ValueError("pass resume_from or initial_state, not both")
@@ -128,6 +133,7 @@ def solve_spmd(
         state = worker_state_from_flat(ck.arrays)
         rounds = ck.rounds
         resumed_from = cfg.resume_from
+        resume_arrays = ck.arrays
         cap = int(state.frontier.masks.shape[-2])
     elif initial_state is None:
         state = jax.vmap(
@@ -142,6 +148,21 @@ def solve_spmd(
         from repro.launch.mesh import make_solver_mesh
 
         mesh = make_solver_mesh(cfg.num_workers)
+
+    spill = None
+    if cfg.frontier_spill:
+        if mesh is not None or cfg.use_mesh:
+            raise ValueError(
+                "frontier_spill has no mesh path yet (vmap virtual workers "
+                "only) — drop use_mesh or disable frontier_spill"
+            )
+        from repro.core.spill import FrontierSpiller, make_spiller
+
+        spill = make_spiller(cfg, spec, g, cap, cfg.num_workers)
+        if resume_arrays is not None and FrontierSpiller.present_in(
+            resume_arrays
+        ):
+            spill.load_flat(resume_arrays)
 
     use_fpt = cfg.mode == "fpt"
     if mesh is not None:
@@ -181,17 +202,33 @@ def solve_spmd(
     chunks = 0
     checkpoints_written = 0
     while rounds < cfg.max_rounds:
-        state, done, ran = step(state)
-        done, ran = jax.device_get((done, ran))
+        state, done, ran, hot = step(state)
+        done, ran, hot = jax.device_get((done, ran, hot))
         rounds += int(ran)
         chunks += 1
-        if bool(done):
+        done = bool(done)
+        if spill is not None and spill.wants_pump(hot, done):
+            # an FPT bound hit finishes the solve regardless of cold backlog
+            # (quiescent-done without the bound must refill and continue)
+            fpt_hit = (
+                done
+                and use_fpt
+                and int(jax.device_get(state.best_val.min()))
+                <= int(spec.fpt_target(k))
+            )
+            if not fpt_hit:
+                frontier, hot = spill.pump_frontier(state.frontier)
+                state = state._replace(frontier=frontier)
+                done = done and int(hot.sum()) == 0
+        if done:
             break
         if (
             cfg.checkpoint_dir is not None
             and chunks % cfg.checkpoint_every == 0
         ):
-            _write_solo_checkpoint(spec, g, cfg, fingerprint, state, rounds)
+            _write_solo_checkpoint(
+                spec, g, cfg, fingerprint, state, rounds, spill
+            )
             checkpoints_written += 1
     wall = time.perf_counter() - t0
 
@@ -210,6 +247,10 @@ def solve_spmd(
     )
     r.checkpoints_written = checkpoints_written
     r.resumed_from = resumed_from
+    if spill is not None:
+        r.spilled_tasks = spill.spilled_total
+        r.readmitted_tasks = spill.readmitted_total
+        r.cold_bytes_peak = spill.cold_bytes_peak
     return r
 
 
@@ -239,11 +280,15 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
     """
     from repro.core.superstep import (
         LaneState,
+        lane_resume,
         lane_state_from_flat,
         lane_state_to_flat,
         slice_lanes,
         step_lanes,
     )
+
+    if cfg.frontier_spill:
+        from repro.core.spill import FrontierSpiller, make_spiller
 
     if cfg.use_mesh:
         raise ValueError(
@@ -315,7 +360,13 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
         )
         resume_bucket = int(meta["bucket_idx"])
 
-    def write_checkpoint(bi, lanes, datas, fpt_bounds, total_ran):
+    def patch_spill(r, sp):
+        if sp is not None:
+            r.spilled_tasks = sp.spilled_total
+            r.readmitted_tasks = sp.readmitted_total
+            r.cold_bytes_peak = sp.cold_bytes_peak
+
+    def write_checkpoint(bi, lanes, datas, fpt_bounds, total_ran, spillers):
         from repro.checkpoint import solve as _ckpt
 
         ck = _ckpt.SolveCheckpoint(
@@ -342,6 +393,9 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
         ck.arrays.update(_ckpt.data_to_flat(datas, "datas"))
         if fpt_bounds is not None:
             ck.arrays["fpt_bounds"] = np.asarray(jax.device_get(fpt_bounds))
+        for lane, sp in enumerate(spillers):
+            if sp is not None:
+                ck.arrays.update(sp.to_flat(f"spill{lane}"))
         ck.pack_graphs(range(B), graphs)
         ck.save(cfg.checkpoint_dir, chunks_total)
 
@@ -366,6 +420,18 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
             )
             total_ran = int(resume_ck.meta["total_ran"])
             live_h = ~np.asarray(jax.device_get(lanes.done))
+            spillers = [None] * lanes.num_lanes
+            if cfg.frontier_spill:
+                for lane in range(lanes.num_lanes):
+                    sp = make_spiller(
+                        cfg, spec, graphs[int(lanes.tag[lane])], cap,
+                        cfg.num_workers,
+                    )
+                    if FrontierSpiller.present_in(
+                        resume_ck.arrays, f"spill{lane}"
+                    ):
+                        sp.load_flat(resume_ck.arrays, f"spill{lane}")
+                    spillers[lane] = sp
             resume_ck = None  # at most one in-flight bucket per checkpoint
         else:
             initial_bests = [
@@ -390,6 +456,12 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
             )
             total_ran = 0
             live_h = np.ones(len(idxs), bool)  # live entering the next chunk
+            spillers = [None] * len(idxs)
+            if cfg.frontier_spill:
+                spillers = [
+                    make_spiller(cfg, spec, graphs[i], cap, cfg.num_workers)
+                    for i in idxs
+                ]
 
         plane = cache.batch_plane(spec, cfg, pad, use_fpt)
 
@@ -404,11 +476,32 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
             lane_stats["chunk_calls"] += 1
             lane_stats["lane_chunks"] += lanes.num_lanes
             lane_stats["live_lane_chunks"] += int(live_h.sum())
-            lanes, ran = step_lanes(plane, datas, lanes, fpt_bounds)
-            done_h, ran_h = jax.device_get((lanes.done, ran))
+            lanes, ran, hot = step_lanes(plane, datas, lanes, fpt_bounds)
+            done_h, ran_h, hot_h = jax.device_get((lanes.done, ran, hot))
             total_ran += int(ran_h)
             chunks_total += 1
-            done_h = np.asarray(done_h)
+            done_h = np.array(done_h)
+            if cfg.frontier_spill:
+                hot_h = np.array(hot_h)
+                best_h = bounds_h = None
+                for lane, sp in enumerate(spillers):
+                    if sp is None or not sp.wants_pump(
+                        hot_h[lane], bool(done_h[lane])
+                    ):
+                        continue
+                    if bool(done_h[lane]) and use_fpt:
+                        if best_h is None:
+                            best_h = np.asarray(
+                                jax.device_get(lanes.worker.best_val)
+                            )[:, 0]
+                            bounds_h = np.asarray(jax.device_get(fpt_bounds))
+                        if int(best_h[lane]) <= int(bounds_h[lane]):
+                            continue  # FPT bound hit — finished for real
+                    lanes, hot_lane = sp.pump_lane(lanes, lane)
+                    hot_h[lane] = hot_lane
+                    if bool(done_h[lane]) and int(hot_lane.sum()) > 0:
+                        lanes = lane_resume(lanes, lane)
+                        done_h[lane] = False
             live_h = ~done_h
             if done_h.all():
                 break
@@ -433,9 +526,11 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
                         results[oi] = extract(
                             host, lane, oi, int(rounds_h[lane]), 0.0
                         )
+                        patch_spill(results[oi], spillers[lane])
                 sel = np.concatenate([live, fillers]).astype(np.int64)
                 lanes = slice_lanes(lanes, sel)
                 datas = problems_base.slice_instances(datas, sel)
+                spillers = [spillers[i] for i in sel]
                 if fpt_bounds is not None:
                     fpt_bounds = fpt_bounds[sel]
                 live_h = live_h[sel]
@@ -445,7 +540,9 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
                 cfg.checkpoint_dir is not None
                 and chunks_total % cfg.checkpoint_every == 0
             ):
-                write_checkpoint(bi, lanes, datas, fpt_bounds, total_ran)
+                write_checkpoint(
+                    bi, lanes, datas, fpt_bounds, total_ran, spillers
+                )
                 checkpoints_written += 1
 
         host = _engine._fetch_batch_state(lanes.worker)
@@ -454,6 +551,7 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
             oi = int(lanes.tag[lane])
             if oi not in results:
                 results[oi] = extract(host, lane, oi, int(rounds_h[lane]), 0.0)
+                patch_spill(results[oi], spillers[lane])
         bucket_wall = time.perf_counter() - t0
         wall_total += bucket_wall
         per_wall = bucket_wall / max(len(idxs), 1)

@@ -62,6 +62,13 @@ class SolveConfig:
     capacity: Optional[int] = None
     compact_threshold: float = 0.25
     use_mesh: bool = False
+    # -- hierarchical frontier memory (repro.core.spill) ----------------------
+    # spill the device frontier to a codec-compressed host cold tier instead
+    # of dropping tasks at saturation; (low, high) watermarks are fractions
+    # of the hot capacity, and spill_codec picks the §4.3 record encoding
+    frontier_spill: bool = False
+    spill_watermarks: tuple = (0.5, 0.9)
+    spill_codec: str = "optimized"
     # -- session admission (submit()/flush() via serving.SolveBatcher) --------
     batch_size: int = 8
     # -- continuous-batching service (SolverSession.serve / SolveService) -----
@@ -92,6 +99,10 @@ class SolveConfig:
     def __post_init__(self):
         if isinstance(self.k, list):
             object.__setattr__(self, "k", tuple(self.k))
+        if isinstance(self.spill_watermarks, list):
+            object.__setattr__(
+                self, "spill_watermarks", tuple(self.spill_watermarks)
+            )
         self._validate()
 
     # -- validation (once, here — not scattered across engines) ---------------
@@ -117,6 +128,18 @@ class SolveConfig:
         from repro.core.encoding import make_codec
 
         make_codec(self.codec, 1)
+        make_codec(self.spill_codec, 1)
+        wm = self.spill_watermarks
+        if (
+            not isinstance(wm, tuple)
+            or len(wm) != 2
+            or not all(isinstance(x, (int, float)) for x in wm)
+            or not 0 < wm[0] < wm[1] <= 1
+        ):
+            raise ValueError(
+                f"SolveConfig.spill_watermarks must be (low, high) fractions "
+                f"with 0 < low < high <= 1, got {wm!r}"
+            )
         for name in (
             "num_workers", "steps_per_round", "lanes", "donate_k",
             "chunk_rounds", "max_rounds", "batch_size", "service_lanes",
@@ -176,6 +199,7 @@ class SolveConfig:
         d = dataclasses.asdict(self)
         if isinstance(d["k"], tuple):
             d["k"] = list(d["k"])
+        d["spill_watermarks"] = list(d["spill_watermarks"])
         return d
 
     @classmethod

@@ -82,6 +82,9 @@ class ServiceStats(_DictAccessShim):
     wait_s: float = 0.0
     residency_s: float = 0.0
     deadline_hit: bool = False
+    # the wall-clock twin of deadline_hit: the request's deadline_s elapsed
+    # (measured on the service's injected clock) before the solve finished
+    wall_deadline_hit: bool = False
 
     @classmethod
     def from_dict(cls, d: dict) -> "ServiceStats":
@@ -107,6 +110,13 @@ class SolveStats(_DictAccessShim):
     # -- durability (spmd checkpoint/resume) ----------------------------------
     checkpoints_written: int = 0
     resumed_from: Optional[str] = None
+    # -- hierarchical frontier memory (spmd, cfg.frontier_spill) --------------
+    # cold-tier traffic: tasks evicted to the host store, tasks decoded and
+    # re-admitted, and the store's peak encoded size in bytes.  With spill
+    # enabled, overflow/overflow_count stay 0 (the no-drop guarantee).
+    spilled_tasks: int = 0
+    readmitted_tasks: int = 0
+    cold_bytes_peak: int = 0
     # -- discrete-event simulator backends ------------------------------------
     ticks: int = 0
     failed_requests: int = 0
@@ -253,6 +263,9 @@ def from_engine_result(r, *, problem: str, backend: str = "spmd") -> SolveResult
             transfer_bytes_per_round=r.transfer_bytes_per_round,
             checkpoints_written=r.checkpoints_written,
             resumed_from=r.resumed_from,
+            spilled_tasks=r.spilled_tasks,
+            readmitted_tasks=r.readmitted_tasks,
+            cold_bytes_peak=r.cold_bytes_peak,
         ),
     )
 

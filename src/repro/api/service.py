@@ -31,9 +31,12 @@ Scheduling is deterministic: admission order is a pure function of submit
 order and completion order (``fifo``), or of the request's
 ``(priority desc, deadline asc, submit seq)`` key (``priority``), with an
 optional per-tenant cap on simultaneously occupied lanes.  ``deadline`` is
-a *superstep budget* (the anytime-algorithm deadline of Avis & Devroye),
-checked at chunk boundaries: a lane over budget is evicted with its
-best-so-far anytime result and ``stats["service"]["deadline_hit"]=True``.
+a *superstep budget* (the anytime-algorithm deadline of Avis & Devroye) and
+``deadline_s`` its wall-clock twin, both checked at chunk boundaries: a lane
+over either budget is evicted with its best-so-far anytime result and
+``r.stats.service.deadline_hit`` / ``.wall_deadline_hit`` set.  Wall time is
+read from an injectable ``clock`` (monotonic seconds) so deadline behavior
+is testable without sleeping — and never from inside traced code.
 
 :class:`AsyncSolveService` wraps a service in an asyncio pump for the
 ``launch.serve`` front end: ``await svc.solve(g)`` resolves when the
@@ -76,6 +79,7 @@ class SolveRequest:
     g: object
     priority: int = 0
     deadline: Optional[int] = None  # superstep budget (anytime eviction)
+    deadline_s: Optional[float] = None  # wall-clock budget since submit
     tenant: Optional[str] = None
     k: Optional[int] = None  # fpt decision target (fpt mode only)
     submit_s: float = 0.0
@@ -88,6 +92,7 @@ def _req_meta(req: SolveRequest) -> dict:
         "ticket": req.ticket,
         "priority": req.priority,
         "deadline": req.deadline,
+        "deadline_s": req.deadline_s,
         "tenant": req.tenant,
         "k": req.k,
         "submit_s": req.submit_s,
@@ -100,6 +105,7 @@ def _req_from_meta(m: dict, graphs: dict) -> SolveRequest:
         g=graphs[int(m["ticket"])],
         priority=int(m["priority"]),
         deadline=m["deadline"],
+        deadline_s=m.get("deadline_s"),
         tenant=m["tenant"],
         k=m["k"],
         submit_s=float(m["submit_s"]),
@@ -180,6 +186,9 @@ class _LivePlane:
         # host-side per-lane occupancy records (None = vacant)
         self.requests: list = [None] * B
         self.admit_s: list = [0.0] * B
+        # per-lane cold tiers (repro.core.spill), created at admission when
+        # cfg.frontier_spill is on; survive chunks, dropped at retire
+        self.spillers: list = [None] * B
 
     def occupied_count(self) -> int:
         return int(self.lanes.occupied().sum())
@@ -209,8 +218,12 @@ class SolveService:
         config: Optional[SolveConfig] = None,
         *,
         cache: Optional[PlaneCache] = None,
+        clock=None,
     ):
         self.spec = get_problem(problem)
+        # monotonic-seconds source for submit/admit/deadline bookkeeping;
+        # injectable so wall-clock deadline tests advance time themselves
+        self._clock = clock if clock is not None else time.perf_counter
         self.config = config if config is not None else SolveConfig()
         if self.config.use_mesh:
             raise ValueError(
@@ -224,7 +237,7 @@ class SolveService:
         self._planes: dict = {}  # (W, n_exact|None) -> _LivePlane
         self._results: dict = {}  # ticket -> SolveResult
         self._next_ticket = 0
-        self._t0 = time.perf_counter()
+        self._t0 = self._clock()
         self._stats = {
             "submitted": 0,
             "completed": 0,
@@ -245,19 +258,27 @@ class SolveService:
         *,
         priority: int = 0,
         deadline: Optional[int] = None,
+        deadline_s: Optional[float] = None,
         tenant: Optional[str] = None,
         k: Optional[int] = None,
     ) -> int:
         """Queue one instance; returns its ticket immediately.
 
         ``deadline`` is a superstep budget (anytime eviction at chunk
-        granularity), NOT wall time; ``k`` overrides the config's fpt
-        target for this request (fpt mode only).
+        granularity); ``deadline_s`` is a wall-clock budget in seconds
+        since submit, measured on the service's clock and checked at the
+        same chunk boundaries; ``k`` overrides the config's fpt target for
+        this request (fpt mode only).
         """
         if k is not None and self.config.mode != "fpt":
             raise ValueError("per-request k needs mode='fpt'")
         if deadline is not None and deadline < 1:
             raise ValueError(f"deadline must be a superstep budget >= 1, got {deadline}")
+        if deadline_s is not None and not deadline_s > 0:
+            raise ValueError(
+                f"deadline_s must be a wall-clock budget > 0 seconds, "
+                f"got {deadline_s}"
+            )
         if self.config.mode == "fpt" and k is None:
             k = self.config.solo_k()
         ticket = self._next_ticket
@@ -268,9 +289,10 @@ class SolveService:
                 g=g,
                 priority=priority,
                 deadline=deadline,
+                deadline_s=deadline_s,
                 tenant=tenant,
                 k=k,
-                submit_s=time.perf_counter() - self._t0,
+                submit_s=self._clock() - self._t0,
             )
         )
         self._stats["submitted"] += 1
@@ -408,6 +430,9 @@ class SolveService:
                 ck.arrays[f"plane{pi}/fpt_bounds"] = np.asarray(
                     jax.device_get(plane.fpt_bounds)
                 )
+            for lane, sp in enumerate(plane.spillers):
+                if sp is not None:
+                    ck.arrays.update(sp.to_flat(f"plane{pi}/spill{lane}"))
             planes_meta.append(
                 {
                     "key": list(key),
@@ -485,6 +510,20 @@ class SolveService:
                 for m in pmeta["requests"]
             ]
             plane.admit_s = [float(a) for a in pmeta["admit_s"]]
+            if svc.config.frontier_spill:
+                from repro.core.spill import FrontierSpiller, make_spiller
+
+                for lane, r in enumerate(plane.requests):
+                    pref = f"plane{pi}/spill{lane}"
+                    if r is not None and FrontierSpiller.present_in(
+                        ck.arrays, pref
+                    ):
+                        sp = make_spiller(
+                            svc.config, svc.spec, r.g, plane.cap,
+                            svc.config.num_workers,
+                        )
+                        sp.load_flat(ck.arrays, pref)
+                        plane.spillers[lane] = sp
             svc._planes[key] = plane
         for m in meta["queue"]:
             svc.scheduler.push(_req_from_meta(m, graphs))
@@ -554,7 +593,13 @@ class SolveService:
                 int(spec.fpt_target(req.k))
             )
         plane.requests[lane] = req
-        plane.admit_s[lane] = time.perf_counter() - self._t0
+        plane.admit_s[lane] = self._clock() - self._t0
+        if cfg.frontier_spill:
+            from repro.core.spill import make_spiller
+
+            plane.spillers[lane] = make_spiller(
+                cfg, spec, g, plane.cap, cfg.num_workers
+            )
         self.cache.note(
             "batch",
             spec,
@@ -569,23 +614,60 @@ class SolveService:
         self._stats["chunk_calls"] += 1
         self._stats["lane_chunks"] += plane.lanes.num_lanes
         self._stats["live_lane_chunks"] += int(occupied_before.sum())
-        plane.lanes, _ran = step_lanes(
+        plane.lanes, _ran, hot = step_lanes(
             plane.plane, plane.datas, plane.lanes, plane.fpt_bounds
         )
         done_h, rounds_h = map(
             np.asarray, jax.device_get((plane.lanes.done, plane.lanes.rounds))
         )
+        done_h = np.array(done_h)
 
+        if self.config.frontier_spill:
+            # the spill pump runs BEFORE the finished verdict: a lane that
+            # went quiescent with a cold backlog is refilled and resumed,
+            # not retired (an FPT bound hit finishes regardless)
+            from repro.core.superstep import lane_resume
+
+            hot_h = np.array(jax.device_get(hot))
+            best_h = bounds_h = None
+            for lane in np.flatnonzero(occupied_before):
+                sp = plane.spillers[lane]
+                if sp is None or not sp.wants_pump(
+                    hot_h[lane], bool(done_h[lane])
+                ):
+                    continue
+                if bool(done_h[lane]) and plane.use_fpt:
+                    if best_h is None:
+                        best_h = np.asarray(
+                            jax.device_get(plane.lanes.worker.best_val)
+                        )[:, 0]
+                        bounds_h = np.asarray(
+                            jax.device_get(plane.fpt_bounds)
+                        )
+                    if int(best_h[lane]) <= int(bounds_h[lane]):
+                        continue
+                plane.lanes, hot_lane = sp.pump_lane(plane.lanes, int(lane))
+                hot_h[lane] = hot_lane
+                if bool(done_h[lane]) and int(hot_lane.sum()) > 0:
+                    plane.lanes = lane_resume(plane.lanes, int(lane))
+                    done_h[lane] = False
+
+        now = self._clock() - self._t0
         finished = np.flatnonzero(occupied_before & done_h)
-        over_budget = [
-            lane
-            for lane in np.flatnonzero(occupied_before & ~done_h)
-            if rounds_h[lane]
-            >= min(
-                plane.requests[lane].deadline or self.config.max_rounds,
-                self.config.max_rounds,
-            )
-        ]
+        over_wall = set()
+        over_budget = []
+        for lane in np.flatnonzero(occupied_before & ~done_h):
+            req = plane.requests[lane]
+            if rounds_h[lane] >= min(
+                req.deadline or self.config.max_rounds, self.config.max_rounds
+            ):
+                over_budget.append(lane)
+            elif (
+                req.deadline_s is not None
+                and now - req.submit_s >= req.deadline_s
+            ):
+                over_budget.append(lane)
+                over_wall.add(int(lane))
         if len(finished) == 0 and not over_budget:
             return []
 
@@ -595,7 +677,6 @@ class SolveService:
             lane = int(lane)
             req = plane.requests[lane]
             evicted = lane not in finished
-            now = time.perf_counter() - self._t0
             r = _engine._extract_result(
                 host,
                 lane,
@@ -609,12 +690,22 @@ class SolveService:
                 packed_status=self.config.packed_status,
             )
             res = from_engine_result(r, problem=self.spec.name, backend="spmd")
+            sp = plane.spillers[lane]
+            if sp is not None:
+                res.stats.spilled_tasks = sp.spilled_total
+                res.stats.readmitted_tasks = sp.readmitted_total
+                res.stats.cold_bytes_peak = sp.cold_bytes_peak
             res.stats.service = ServiceStats(
                 lane=lane,
                 plane=str(plane.key),
                 wait_s=plane.admit_s[lane] - req.submit_s,
                 residency_s=now - plane.admit_s[lane],
-                deadline_hit=evicted and req.deadline is not None,
+                deadline_hit=(
+                    evicted
+                    and req.deadline is not None
+                    and lane not in over_wall
+                ),
+                wall_deadline_hit=lane in over_wall,
             )
             self._results[req.ticket] = res
             completed.append(req.ticket)
@@ -624,6 +715,7 @@ class SolveService:
             self._stats["residency_s_total"] += now - plane.admit_s[lane]
             plane.lanes = lane_retire(plane.lanes, lane)
             plane.requests[lane] = None
+            plane.spillers[lane] = None
         return completed
 
 

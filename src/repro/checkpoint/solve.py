@@ -45,7 +45,7 @@ import numpy as np
 
 from repro.checkpoint import store
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 #: SolveConfig fields that determine the solve TRAJECTORY (branching
 #: decisions, transfer schedule, stats) — the fingerprint material.  Host
@@ -70,6 +70,11 @@ TRAJECTORY_FIELDS = (
     "service_lanes",
     "admission",
     "tenant_max_lanes",
+    # the hierarchical frontier memory changes which tasks live on device
+    # at any sync point, so its knobs are trajectory material (schema v2)
+    "frontier_spill",
+    "spill_watermarks",
+    "spill_codec",
 )
 
 
@@ -88,8 +93,9 @@ def graph_digest(g) -> str:
 def config_fingerprint(kind: str, problem: str, cfg, graph_digests) -> str:
     """Digest of (checkpoint kind, problem, trajectory knobs, instances)."""
     knobs = {name: getattr(cfg, name) for name in TRAJECTORY_FIELDS}
-    if isinstance(knobs["k"], tuple):
-        knobs["k"] = list(knobs["k"])
+    for name, v in knobs.items():
+        if isinstance(v, tuple):
+            knobs[name] = list(v)
     blob = json.dumps(
         {
             "schema": SCHEMA_VERSION,

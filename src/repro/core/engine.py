@@ -83,6 +83,14 @@ class EngineResult:
     # host drivers in repro.api.backends, not by result extraction.
     checkpoints_written: int = 0
     resumed_from: Optional[str] = None
+    # hierarchical frontier memory (repro.core.spill): tasks evicted to /
+    # re-admitted from the host cold tier, and its peak encoded size.  Set
+    # by the host drivers when cfg.frontier_spill is on; with spill enabled
+    # overflow/overflow_count stay 0 by construction (the no-drop
+    # guarantee), so saturation shows up HERE instead.
+    spilled_tasks: int = 0
+    readmitted_tasks: int = 0
+    cold_bytes_peak: int = 0
 
 
 def _scatter_startup(

@@ -260,6 +260,68 @@ def pending_per_worker(f: Frontier) -> jnp.ndarray:
     return f.active.sum(axis=-1).astype(jnp.int32)
 
 
+# -- the spill boundary --------------------------------------------------------
+#
+# The hierarchical frontier memory (repro.core.spill) moves task records
+# across the host/device boundary between chunks: the pump fetches a pool,
+# mutates it with numpy, and writes it back.  The write-backs are jitted so
+# a pump costs one fused executable instead of a scatter dispatch per leaf
+# (and, for the live plane, the lane index is a traced scalar so every lane
+# shares the executable).  ``overflow``/``dropped`` are deliberately left
+# untouched: with spill enabled they must stay zero (the no-drop guarantee),
+# and a nonzero value surviving the pump is a bug the tests would catch.
+
+
+@jax.jit
+def _set_pool(f, masks, sols, depths, active):
+    return f._replace(masks=masks, sols=sols, depths=depths, active=active)
+
+
+def write_pool(f: Frontier, masks, sols, depths, active) -> Frontier:
+    """Replace the task-pool leaves of a (stacked) frontier wholesale —
+    the solo spill pump's write-back."""
+    return _set_pool(
+        f,
+        jnp.asarray(masks, jnp.uint32),
+        jnp.asarray(sols, jnp.uint32),
+        jnp.asarray(depths, jnp.int32),
+        jnp.asarray(active, bool),
+    )
+
+
+@jax.jit
+def _get_lane_pool(f, lane):
+    return f.masks[lane], f.sols[lane], f.depths[lane], f.active[lane]
+
+
+def read_lane_pool(f: Frontier, lane: int):
+    """One lane's (P, CAP, ...) pool leaves of a (B, P, CAP, ...) stacked
+    frontier — the live plane's spill-pump fetch."""
+    return _get_lane_pool(f, jnp.int32(lane))
+
+
+@jax.jit
+def _set_lane_pool(f, lane, masks, sols, depths, active):
+    return f._replace(
+        masks=f.masks.at[lane].set(masks),
+        sols=f.sols.at[lane].set(sols),
+        depths=f.depths.at[lane].set(depths),
+        active=f.active.at[lane].set(active),
+    )
+
+
+def write_lane_pool(f: Frontier, lane: int, masks, sols, depths, active):
+    """Write one lane's pool back into a (B, P, CAP, ...) stacked frontier."""
+    return _set_lane_pool(
+        f,
+        jnp.int32(lane),
+        jnp.asarray(masks, jnp.uint32),
+        jnp.asarray(sols, jnp.uint32),
+        jnp.asarray(depths, jnp.int32),
+        jnp.asarray(active, bool),
+    )
+
+
 def pending_per_instance(f: Frontier) -> jnp.ndarray:
     """Pending counts per INSTANCE lane of a (B, P, CAP) stacked frontier:
     the slot and worker axes are reduced, the lane axis survives — the

@@ -1,0 +1,342 @@
+"""Hierarchical frontier memory: device-hot tier + compressed host cold tier.
+
+The device frontier (:mod:`repro.core.frontier`) is a fixed-capacity pool, so
+a search whose peak frontier exceeds it used to *drop* tasks (loudly, via
+``overflow_count`` — but dropped is dropped).  This module turns that fixed
+pool into the **hot tier** of a two-level memory:
+
+* a **high-water mark**: when a host sync finds a worker's pool above it,
+  the shallowest pending tasks (the paper's donation priority, Alg. 6 — the
+  quasi-horizontal leaves a worker would part with anyway) are evicted,
+  encoded with the registered §4.3 codec (57–2000× smaller than adjacency
+  payloads for the optimized layout), and appended to a per-(worker,
+  depth-band) host store;
+* a **low-water mark**: when a worker's pool drains below it, cold records
+  are decoded and re-admitted — the worker's own bands first, then stealing
+  from the globally shallowest band, scanning donors in the Algorithm-7
+  waiting-list order (:func:`repro.core.waiting_list.startup_assignment`),
+  the same deterministic permutation that placed the startup frontier.
+
+Everything here runs on the host between device chunks (plain numpy, no
+tracing), so spilled solves are deterministic run-to-run and the whole cold
+tier serializes into a :class:`~repro.checkpoint.solve.SolveCheckpoint` as a
+handful of named arrays (kill-anywhere resume stays bit-identical).
+
+The **no-drop guarantee**: :func:`resolve_watermarks` refuses any watermark
+placement that leaves less headroom above the high mark than one chunk can
+generate — per superstep a worker nets at most ``steps_per_round·lanes`` new
+tasks from exploration plus ``donate_k`` received donations (plus a
+transient ``lanes`` during the pop/push cycle), so capping the high mark at
+``capacity - chunk_rounds·(steps_per_round·lanes + donate_k) - lanes``
+means the hot tier cannot overflow between two pump points.  With spill
+enabled, ``overflow_count`` stays 0 by construction (property-tested).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .encoding import Task
+from .waiting_list import startup_assignment
+
+# depth-band granularity of the cold tier: records are stored FIFO inside a
+# band and re-admitted shallowest-band-first, so the cold tier preserves the
+# engine's quasi-horizontal priority without keeping a global sorted order
+BAND_WIDTH = 8
+
+
+def chunk_headroom(
+    *, chunk_rounds: int, steps_per_round: int, lanes: int, donate_k: int
+) -> int:
+    """Worst-case growth of ONE worker's pool between two host syncs.
+
+    Each superstep nets at most ``steps_per_round * lanes`` tasks from
+    exploration (every popped lane pushes back two children) plus
+    ``donate_k`` received donations; the trailing ``+ lanes`` covers the
+    transient inside a round where children are pushed before the popped
+    parents' slots are reused.
+    """
+    return chunk_rounds * (steps_per_round * lanes + donate_k) + lanes
+
+
+def resolve_watermarks(
+    capacity: int,
+    watermarks,
+    *,
+    chunk_rounds: int,
+    steps_per_round: int,
+    lanes: int,
+    donate_k: int,
+) -> tuple:
+    """Turn fractional ``(low, high)`` watermarks into slot counts.
+
+    The high mark is additionally capped at ``capacity - headroom`` so one
+    chunk's growth can never overflow the hot tier (the no-drop guarantee);
+    a capacity too small to leave ≥ 2 slots under that cap is a config
+    error, reported with the arithmetic spelled out.
+    """
+    low_frac, high_frac = watermarks
+    head = chunk_headroom(
+        chunk_rounds=chunk_rounds,
+        steps_per_round=steps_per_round,
+        lanes=lanes,
+        donate_k=donate_k,
+    )
+    high = min(int(high_frac * capacity), capacity - head)
+    if high < 2:
+        raise ValueError(
+            f"frontier_spill needs hot capacity above the per-chunk growth "
+            f"headroom: capacity={capacity} minus headroom={head} "
+            f"(chunk_rounds*(steps_per_round*lanes + donate_k) + lanes = "
+            f"{chunk_rounds}*({steps_per_round}*{lanes} + {donate_k}) + "
+            f"{lanes}) leaves a high-water mark of {high} slots — raise "
+            f"capacity or lower chunk_rounds/steps_per_round"
+        )
+    low = max(1, min(int(low_frac * capacity), high - 1))
+    return low, high
+
+
+class FrontierSpiller:
+    """One instance's cold tier plus the host-side spill/refill pump.
+
+    Owns per-(worker, depth-band) FIFO stores of codec-encoded task records
+    and the two watermarks; :meth:`pump_host` is the pure-numpy core (spill
+    above high, refill below low), :meth:`pump_frontier` /
+    :meth:`pump_lane` are the device-boundary wrappers used by the solo and
+    batched drivers.  All state is host-resident and the pump order is a
+    fixed function of the pool contents, so spilled solves replay
+    bit-identically — including across a checkpoint/resume cut
+    (:meth:`to_flat` / :meth:`load_flat`).
+    """
+
+    def __init__(
+        self,
+        codec,
+        num_workers: int,
+        capacity: int,
+        watermarks,
+        *,
+        chunk_rounds: int,
+        steps_per_round: int,
+        lanes: int,
+        donate_k: int,
+        graph=None,
+    ):
+        self.codec = codec
+        self.num_workers = num_workers
+        self.low, self.high = resolve_watermarks(
+            capacity,
+            watermarks,
+            chunk_rounds=chunk_rounds,
+            steps_per_round=steps_per_round,
+            lanes=lanes,
+            donate_k=donate_k,
+        )
+        if getattr(codec, "name", "") == "basic":
+            if graph is None:
+                raise ValueError(
+                    "spill_codec='basic' encodes the induced subgraph, so "
+                    "the spiller needs the instance graph"
+                )
+            self._encode = lambda task: codec.encode(task, graph)
+        else:
+            self._encode = codec.encode
+        self._graph = graph
+        # Algorithm-7 startup permutation, 0-based: refill scan order
+        self.order = tuple(
+            o - 1 for o in startup_assignment(2, num_workers)
+        )
+        self._bands = [dict() for _ in range(num_workers)]
+        self.spilled_total = 0
+        self.readmitted_total = 0
+        self.cold_tasks = 0
+        self.cold_bytes_peak = 0
+
+    @property
+    def cold_bytes(self) -> int:
+        return self.cold_tasks * self.codec.record_bytes
+
+    # -- cold-tier store -------------------------------------------------------
+
+    def _push_cold(self, w: int, mask, sol, depth: int) -> None:
+        rec = self._encode(
+            Task(
+                mask=np.asarray(mask, np.uint32),
+                sol_mask=np.asarray(sol, np.uint32),
+                depth=int(depth),
+            )
+        )
+        self._bands[w].setdefault(int(depth) // BAND_WIDTH, []).append(rec)
+        self.spilled_total += 1
+        self.cold_tasks += 1
+        self.cold_bytes_peak = max(self.cold_bytes_peak, self.cold_bytes)
+
+    def _pop_band(self, w: int, band: int) -> np.ndarray:
+        fifo = self._bands[w][band]
+        rec = fifo.pop(0)
+        if not fifo:
+            del self._bands[w][band]
+        self.cold_tasks -= 1
+        self.readmitted_total += 1
+        return rec
+
+    def _pop_cold(self, w: int):
+        """Shallowest record for worker ``w``: its own store first, else
+        steal from the globally shallowest band (donors in Alg-7 order).
+        Returns a decoded :class:`Task`, or None when the tier is empty."""
+        if self._bands[w]:
+            rec = self._pop_band(w, min(self._bands[w]))
+        elif self.cold_tasks:
+            best = min(min(b) for b in self._bands if b)
+            donor = next(d for d in self.order if self._bands[d].get(best))
+            rec = self._pop_band(donor, best)
+        else:
+            return None
+        return self.codec.decode(rec, self._graph)
+
+    # -- the pump --------------------------------------------------------------
+
+    def wants_pump(self, hot, done: bool) -> bool:
+        """Cheap trigger check from the chunk's per-worker hot counts: any
+        worker above high, or cold records waiting while any worker is below
+        low (or the plane went quiescent)."""
+        hot = np.asarray(hot)
+        if (hot > self.high).any():
+            return True
+        return bool(self.cold_tasks) and (done or bool((hot < self.low).any()))
+
+    def pump_host(self, masks, sols, depths, active) -> bool:
+        """Spill/refill pass over one instance's (P, CAP, ...) host pool.
+
+        Mutates the arrays in place; returns True if anything moved.
+        Eviction order is (depth asc, slot asc) — the donation priority;
+        refill scans workers in Algorithm-7 order and places into the
+        lowest free slot, so the pass is a deterministic function of the
+        pool contents.
+        """
+        counts = active.sum(axis=1).astype(np.int64)
+        moved = False
+        for w in range(self.num_workers):
+            if counts[w] > self.high:
+                slots = np.flatnonzero(active[w])
+                order = slots[np.argsort(depths[w][slots], kind="stable")]
+                for s in order[: counts[w] - self.low]:
+                    self._push_cold(w, masks[w, s], sols[w, s], depths[w, s])
+                    active[w, s] = False
+                counts[w] = self.low
+                moved = True
+        if self.cold_tasks:
+            for w in self.order:
+                while counts[w] < self.low and self.cold_tasks:
+                    task = self._pop_cold(w)
+                    slot = int(np.argmax(~active[w]))
+                    masks[w, slot] = task.mask
+                    sols[w, slot] = task.sol_mask
+                    depths[w, slot] = task.depth
+                    active[w, slot] = True
+                    counts[w] += 1
+                    moved = True
+        return moved
+
+    def pump_frontier(self, frontier):
+        """Pump a solo (P, CAP, ...) device frontier.
+
+        Returns ``(frontier, hot)`` with the post-pump per-worker pending
+        counts — the driver clears its quiescence flag iff any survive."""
+        import jax
+
+        from .frontier import write_pool
+
+        m, s, d, a = (
+            np.array(x)
+            for x in jax.device_get(
+                (frontier.masks, frontier.sols, frontier.depths, frontier.active)
+            )
+        )
+        if self.pump_host(m, s, d, a):
+            frontier = write_pool(frontier, m, s, d, a)
+        return frontier, a.sum(axis=1).astype(np.int64)
+
+    def pump_lane(self, lanes, lane: int):
+        """Pump ONE lane of a live (B, P, CAP, ...) plane.
+
+        Returns ``(lanes, hot)`` like :meth:`pump_frontier`; the write-back
+        is a jitted single-lane scatter, so the compiled plane is untouched
+        (no re-trace)."""
+        import jax
+
+        from .frontier import read_lane_pool, write_lane_pool
+
+        f = lanes.worker.frontier
+        m, s, d, a = (
+            np.array(x) for x in jax.device_get(read_lane_pool(f, lane))
+        )
+        if self.pump_host(m, s, d, a):
+            f = write_lane_pool(f, lane, m, s, d, a)
+            lanes = lanes._replace(worker=lanes.worker._replace(frontier=f))
+        return lanes, a.sum(axis=1).astype(np.int64)
+
+    # -- checkpoint (de)serialization ------------------------------------------
+
+    def to_flat(self, prefix: str = "spill") -> dict:
+        """The cold tier as named uint32/int64 arrays (checkpoint leaves):
+        one ``(N_w, record_words)`` block per worker, band-major FIFO order,
+        plus a counters vector."""
+        flat = {}
+        rw = self.codec.record_words
+        for w in range(self.num_workers):
+            recs = [
+                rec
+                for band in sorted(self._bands[w])
+                for rec in self._bands[w][band]
+            ]
+            flat[f"{prefix}.w{w}"] = (
+                np.stack(recs).astype(np.uint32)
+                if recs
+                else np.zeros((0, rw), np.uint32)
+            )
+        flat[f"{prefix}.counters"] = np.array(
+            [self.spilled_total, self.readmitted_total, self.cold_bytes_peak],
+            np.int64,
+        )
+        return flat
+
+    @staticmethod
+    def present_in(flat: dict, prefix: str = "spill") -> bool:
+        return f"{prefix}.counters" in flat
+
+    def load_flat(self, flat: dict, prefix: str = "spill") -> None:
+        """Rebuild the cold tier from :meth:`to_flat` arrays.  Records are
+        re-banded by their decoded depth; band-major FIFO storage order makes
+        the rebuild exact, so a resumed solve replays bit-identically."""
+        counters = np.asarray(flat[f"{prefix}.counters"])
+        self.spilled_total = int(counters[0])
+        self.readmitted_total = int(counters[1])
+        self.cold_bytes_peak = int(counters[2])
+        self._bands = [dict() for _ in range(self.num_workers)]
+        self.cold_tasks = 0
+        for w in range(self.num_workers):
+            for rec in np.asarray(flat[f"{prefix}.w{w}"], np.uint32):
+                depth = self.codec.decode(rec, self._graph).depth
+                self._bands[w].setdefault(depth // BAND_WIDTH, []).append(rec)
+                self.cold_tasks += 1
+
+
+def make_spiller(cfg, problem, graph, capacity: int, num_workers: int):
+    """Build a :class:`FrontierSpiller` from a SolveConfig — the one shared
+    constructor for the solo, batched, and service drivers (all three must
+    agree on the eviction/re-admission contract, so they all come here)."""
+    from .encoding import make_codec
+
+    codec = make_codec(cfg.spill_codec, graph.n, problem=problem)
+    return FrontierSpiller(
+        codec,
+        num_workers,
+        capacity,
+        cfg.spill_watermarks,
+        chunk_rounds=cfg.chunk_rounds,
+        steps_per_round=cfg.steps_per_round,
+        lanes=cfg.lanes,
+        donate_k=cfg.donate_k,
+        graph=graph,
+    )

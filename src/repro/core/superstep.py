@@ -58,6 +58,7 @@ import numpy as np
 from repro.core.frontier import (
     Frontier,
     make_frontier,
+    pending_per_worker,
     pop_deepest,
     pop_deepest_cheap,
     pop_k_shallowest,
@@ -569,9 +570,12 @@ def build_plane_fn(
 ):
     """Parametric solo chunk runner (vmap virtual workers).
 
-    Returns a jitted ``(data, state) -> (state, done, ran)`` — or, with
+    Returns a jitted ``(data, state) -> (state, done, ran, hot)`` — or, with
     ``use_fpt``, ``(data, state, fpt_bound) -> ...`` where ``fpt_bound`` is
-    the () int32 INTERNAL decision target.  Semantics are identical to
+    the () int32 INTERNAL decision target.  ``hot`` is the (P,) int32
+    per-worker pending count after the chunk — the spill pump's eviction
+    trigger, computed on device so the host decides whether to pump from
+    scalars it already fetched.  Semantics are otherwise identical to
     :func:`build_chunk_fn` (mesh=None); the difference is purely that the
     instance tensors are arguments, so the function is reusable across
     same-shape instances without re-tracing.
@@ -609,9 +613,10 @@ def build_plane_fn(
                 done = done | (state.best_val.min() <= fpt_bound)
             return state, done, i + 1
 
-        return jax.lax.while_loop(
+        state, done, i = jax.lax.while_loop(
             cond, body, (state, jnp.bool_(False), jnp.int32(0))
         )
+        return state, done, i, pending_per_worker(state.frontier)
 
     if use_fpt:
         return jax.jit(_run)
@@ -637,8 +642,11 @@ def build_batch_plane_fn(
     """Parametric batch chunk runner over (B, P, ...) stacked state.
 
     Returns a jitted ``(datas, state, done) -> (state, done, rounds_delta,
-    ran)`` — with ``use_fpt``, an extra trailing ``fpt_bounds`` (B,) int32
-    argument.  Same contract as :func:`build_batch_chunk_fn`, but the batched
+    ran, hot)`` — with ``use_fpt``, an extra trailing ``fpt_bounds`` (B,)
+    int32 argument.  ``hot`` is the (B, P) int32 per-lane, per-worker
+    pending count after the chunk (the spill pump's trigger, see
+    :func:`build_plane_fn`).  Same contract as
+    :func:`build_batch_chunk_fn`, but the batched
     instance tensors are call-time arguments: host-side compaction can
     reslice and keep calling the SAME function, and a later batch with
     previously-seen shapes reuses the executable outright.
@@ -691,9 +699,10 @@ def build_batch_plane_fn(
             return state, new_done, rounds_delta, i + 1
 
         B = done.shape[0]
-        return jax.lax.while_loop(
+        state, done, rounds_delta, i = jax.lax.while_loop(
             cond, body, (state, done, jnp.zeros((B,), jnp.int32), jnp.int32(0))
         )
+        return state, done, rounds_delta, i, pending_per_worker(state.frontier)
 
     if use_fpt:
         return jax.jit(_run)
@@ -818,6 +827,14 @@ def lane_swap_in(
 
 
 _retire_dev = jax.jit(lambda done, lane: done.at[lane].set(True))
+_resume_dev = jax.jit(lambda done, lane: done.at[lane].set(False))
+
+
+def lane_resume(lanes: LaneState, lane: int) -> LaneState:
+    """Un-freeze a quiescent lane WITHOUT touching its occupant: the spill
+    pump re-admitted cold tasks into its frontier, so the "done" verdict the
+    plane reached no longer holds and the lane must keep stepping."""
+    return lanes._replace(done=_resume_dev(lanes.done, jnp.int32(lane)))
 
 
 def lane_retire(lanes: LaneState, lane: int) -> LaneState:
@@ -843,17 +860,21 @@ def step_lanes(plane, datas, lanes: LaneState, fpt_bounds=None):
 
     Finished and vacant lanes are frozen inside the plane (their state and
     per-occupant stats stay bit-identical to a solo run); ``rounds``
-    accumulates each occupant's actual supersteps.  Returns ``(lanes, ran)``
-    where ``ran`` is the chunk's superstep count (0 when every lane was
-    already done — the plane's while_loop exits immediately).
+    accumulates each occupant's actual supersteps.  Returns ``(lanes, ran,
+    hot)`` where ``ran`` is the chunk's superstep count (0 when every lane
+    was already done — the plane's while_loop exits immediately) and ``hot``
+    is the (B, P) per-worker pending count (the spill-pump trigger).
     """
     if fpt_bounds is not None:
-        worker, done, delta, ran = plane(datas, lanes.worker, lanes.done, fpt_bounds)
+        worker, done, delta, ran, hot = plane(
+            datas, lanes.worker, lanes.done, fpt_bounds
+        )
     else:
-        worker, done, delta, ran = plane(datas, lanes.worker, lanes.done)
+        worker, done, delta, ran, hot = plane(datas, lanes.worker, lanes.done)
     return (
         lanes._replace(worker=worker, done=done, rounds=lanes.rounds + delta),
         ran,
+        hot,
     )
 
 
@@ -994,7 +1015,9 @@ def build_batch_chunk_fn(
     * ``rounds_delta`` (B,) int32 supersteps each instance actually ran this
       chunk (0 for already-finished lanes);
     * ``ran``          () int32 supersteps the chunk executed (max over
-      instances) — the host's ``max_rounds`` progress counter.
+      instances) — the host's ``max_rounds`` progress counter;
+    * ``hot``          (B, P) int32 per-worker pending counts (the spill
+      pump's trigger, see :func:`build_plane_fn`).
 
     The while_loop exits when EVERY instance is done or after
     ``chunk_rounds`` supersteps, so one straggler instance never forces the
@@ -1041,7 +1064,8 @@ def build_chunk_fn(
     mesh=None,
     axis_name: str = "workers",
 ):
-    """Device-resident multi-round runner: ``state -> (state, done, ran)``.
+    """Device-resident multi-round runner: ``state -> (state, done, ran,
+    hot)`` with ``hot`` the (P,) per-worker pending counts after the chunk.
 
     Runs up to ``chunk_rounds`` supersteps inside ONE ``lax.while_loop`` on
     device, exiting early on exact global quiescence or (FPT mode) when the
@@ -1118,10 +1142,12 @@ def build_chunk_fn(
         state, done, i = jax.lax.while_loop(
             cond, body, (state0, jnp.bool_(False), jnp.int32(0))
         )
-        return jax.tree.map(lambda x: x[None], state), done, i
+        hot = state.frontier.active.sum().astype(jnp.int32)
+        return jax.tree.map(lambda x: x[None], state), done, i, hot[None]
 
     return jax.jit(
         _shard_map(
-            block, mesh=mesh, in_specs=(spec,), out_specs=(spec, P(), P())
+            block, mesh=mesh, in_specs=(spec,),
+            out_specs=(spec, P(), P(), spec),
         )
     )

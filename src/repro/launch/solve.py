@@ -93,6 +93,9 @@ CONFIG_FLAGS = {
     "latency": "latency",
     "checkpoint_dir": "checkpoint_dir",
     "checkpoint_every": "checkpoint_every",
+    "capacity": "capacity",
+    "spill": "frontier_spill",
+    "spill_codec": "spill_codec",
 }
 
 
@@ -191,6 +194,17 @@ def main():
                          "--checkpoint-every chunks (spmd)")
     ap.add_argument("--checkpoint-every", type=int, default=S,
                     help="chunks between checkpoint writes (default 8)")
+    ap.add_argument("--capacity", type=int, default=S,
+                    help="hot frontier slots per worker "
+                         "(default: engine-sized 4n + 8*lanes)")
+    ap.add_argument("--spill", action="store_true", default=S,
+                    help="hierarchical frontier memory: evict past the "
+                         "high-water mark to a codec-compressed host cold "
+                         "tier instead of dropping tasks (spmd)")
+    ap.add_argument("--spill-codec", default=S,
+                    choices=["optimized", "basic"],
+                    help="record encoding for the cold tier (default: "
+                         "optimized, 2W+1 words/task)")
     ap.add_argument("--resume", default=None, metavar="DIR",
                     help="resume a checkpointed solve (dir or step_N subdir); "
                          "problem/config/graphs come from the checkpoint, "
@@ -260,6 +274,10 @@ def main():
                  f"{cfg.transfer_impl})")
         if s.checkpoints_written:
             line += f" checkpoints={s.checkpoints_written}"
+        if s.spilled_tasks:
+            line += (f" spilled={s.spilled_tasks} "
+                     f"readmitted={s.readmitted_tasks} "
+                     f"cold_peak={s.cold_bytes_peak}B")
     elif backend.name in ("protocol_sim", "centralized"):
         line += (f" bytes={s.total_bytes}"
                  + (f" (center {s.center_bytes})"

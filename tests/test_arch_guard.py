@@ -184,6 +184,7 @@ SOLVE_CONFIG_FIELDS = [
     "compact_threshold",
     "donate_k",
     "explore_impl",
+    "frontier_spill",
     "k",
     "lanes",
     "latency",
@@ -199,6 +200,8 @@ SOLVE_CONFIG_FIELDS = [
     "send_metadata",
     "service_lanes",
     "skip_empty_transfer",
+    "spill_codec",
+    "spill_watermarks",
     "steps_per_round",
     "tenant_max_lanes",
     "transfer_impl",
@@ -231,6 +234,7 @@ def test_solve_config_field_snapshot():
 SOLVE_STATS_FIELDS = [
     "center_bytes",
     "checkpoints_written",
+    "cold_bytes_peak",
     "control_bytes_per_round",
     "failed_requests",
     "max_depth",
@@ -239,9 +243,11 @@ SOLVE_STATS_FIELDS = [
     "overflow",
     "overflow_count",
     "pruned",
+    "readmitted_tasks",
     "resumed_from",
     "service",
     "solutions",
+    "spilled_tasks",
     "termination_cancelled",
     "ticks",
     "total_bytes",
@@ -249,7 +255,14 @@ SOLVE_STATS_FIELDS = [
     "transfer_bytes_total",
     "transfer_rounds",
 ]
-SERVICE_STATS_FIELDS = ["deadline_hit", "lane", "plane", "residency_s", "wait_s"]
+SERVICE_STATS_FIELDS = [
+    "deadline_hit",
+    "lane",
+    "plane",
+    "residency_s",
+    "wait_s",
+    "wall_deadline_hit",
+]
 LANE_STATS_FIELDS = ["chunk_calls", "lane_chunks", "live_lane_chunks", "occupancy"]
 
 

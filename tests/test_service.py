@@ -222,6 +222,75 @@ def test_deadline_evicts_with_anytime_result():
     assert svc2.result(t2).stats.service.deadline_hit is False
 
 
+def test_wall_deadline_evicts_on_injected_clock():
+    """``deadline_s`` is a WALL budget on the service's injectable clock:
+    blowing it between steps evicts with an anytime result flagged
+    ``wall_deadline_hit`` (and NOT ``deadline_hit`` — that stays the
+    superstep-budget flag).  No ``time.time()`` in traced code: advancing
+    the fake clock is the only stimulus."""
+
+    class FakeClock:
+        def __init__(self):
+            self.t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    clk = FakeClock()
+    cfg = SolveConfig(
+        num_workers=4, steps_per_round=2, chunk_rounds=2, service_lanes=2
+    )
+    svc = SolveService("vertex_cover", cfg, clock=clk)
+    g = erdos_renyi(40, 0.28, 0)
+    t = svc.submit(g, deadline_s=5.0)
+    svc.step()  # still within budget: not evicted
+    assert t not in [*svc._results]
+    clk.t = 10.0  # budget blown between steps
+    assert svc.step() == [t]
+    r = svc.result(t)
+    assert r.stats.service.wall_deadline_hit is True
+    assert r.stats.service.deadline_hit is False
+    assert r.found  # anytime incumbent, valid but possibly loose
+    full = SolverSession(problem="vertex_cover", config=cfg).solve(g)
+    assert r.best_size >= full.best_size
+    assert svc.stats()["evicted"] == 1
+
+    # a solve finishing before its wall budget never reports the hit
+    svc2 = SolveService("vertex_cover", cfg, clock=FakeClock())
+    t2 = svc2.submit(erdos_renyi(12, 0.3, 1), deadline_s=100.0)
+    svc2.drain()
+    s2 = svc2.result(t2).stats.service
+    assert s2.wall_deadline_hit is False and s2.deadline_hit is False
+
+
+def test_wall_deadline_survives_checkpoint_restore(tmp_path):
+    """``deadline_s`` rides the request metadata through checkpoint():
+    a restored service still enforces the original wall budget."""
+
+    class FakeClock:
+        def __init__(self):
+            self.t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    cfg = SolveConfig(
+        num_workers=4, steps_per_round=2, chunk_rounds=1, service_lanes=2
+    )
+    svc = SolveService("vertex_cover", cfg, clock=FakeClock())
+    t = svc.submit(erdos_renyi(40, 0.28, 0), deadline_s=5.0)
+    svc.step()
+    svc.checkpoint(str(tmp_path / "ck"))
+    back = SolveService.restore(str(tmp_path / "ck"))
+    req = next(
+        r
+        for p in back._planes.values()
+        for r in p.requests
+        if r is not None
+    )
+    assert req.deadline_s == 5.0
+
+
 def test_submit_validation():
     svc = SolveService(
         "vertex_cover", SolveConfig(num_workers=2, service_lanes=2)
