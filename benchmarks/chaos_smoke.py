@@ -1,0 +1,190 @@
+"""Self-healing gate: a seeded fault schedule must cost nothing but time.
+
+Two legs, one deterministic chaos schedule (``repro.faults``), covering all
+five fault kinds:
+
+* **service leg** — a saturated :class:`~repro.api.SolveService` (spill
+  capacity pinned low, durable checkpoints on) under lane crashes, a stall
+  window, corrupted sparse-transfer and cold-tier payloads, and a
+  checkpoint-write I/O error;
+* **solo leg**   — a checkpointed ``solve`` whose worker state crashes
+  mid-run: recovery restores the last good generation through an injected
+  checkpoint-read I/O error (retry/backoff) and a later write error.
+
+The gate asserts, in-process:
+
+* every request completes with answers **bit-identical** to the fault-free
+  reference run of the same configs (same warm plane cache);
+* **zero tasks lost** — ``overflow_count == 0`` everywhere and every
+  submitted ticket completes;
+* **all five fault kinds fired** and every injected fault was recovered
+  (``pending == 0``: the schedule was not silently skipped);
+* recovery wall stays within ``MAX_WALL_RATIO`` of the fault-free wall.
+
+``check_regression`` additionally pins the injected/recovered/retry
+counters exactly against ``benchmarks/baseline.json`` — the chaos
+trajectory is chunk-clocked, so the numbers are reproducible, not flaky.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+MAX_WALL_RATIO = 1.5
+
+
+def _service_events():
+    from repro.faults import FaultEvent
+
+    return (
+        FaultEvent("crash", at=2, lane=1),
+        FaultEvent("stall", at=3, lane=2, duration=3),
+        FaultEvent("transfer_corrupt", at=1),
+        FaultEvent("transfer_corrupt", at=5),
+        FaultEvent("cold_corrupt", at=1),
+        FaultEvent("cold_corrupt", at=4),
+        FaultEvent("io_error", at=2, op="write"),
+    )
+
+
+def _solo_events():
+    from repro.faults import FaultEvent
+
+    return (
+        FaultEvent("io_error", at=1, op="read"),
+        FaultEvent("crash", at=4),
+        FaultEvent("io_error", at=5, op="write"),
+    )
+
+
+def _run_service(sess, graphs, ckpt_dir, injector=None):
+    svc = sess.serve(
+        injector=injector,
+        lane_stall_chunks=2,
+        checkpoint_dir=ckpt_dir,
+        checkpoint_every=3,
+    )
+    tickets = [svc.submit(g) for g in graphs]
+    svc.drain()
+    return {t: svc.result(t) for t in tickets}, svc
+
+
+def _run_solo(sess, g, ckpt_dir, injector=None):
+    extra = {"injector": injector} if injector is not None else {}
+    return sess.solve(g, checkpoint_dir=ckpt_dir, **extra)
+
+
+def run(smoke: bool = False) -> dict:
+    from repro.api import PlaneCache, SolveConfig, SolverSession
+    from repro.faults import FAULT_KINDS, FaultInjector, FaultPlan
+    from repro.graphs.generators import erdos_renyi
+
+    n0, count = (36, 5) if smoke else (40, 6)
+    graphs = [erdos_renyi(n0 + i, 0.28, seed=i) for i in range(count)]
+    solo_g = erdos_renyi(n0 + 4, 0.3, seed=11)
+
+    cache = PlaneCache()
+    svc_cfg = SolveConfig(
+        num_workers=4, steps_per_round=2, chunk_rounds=2,
+        service_lanes=3, frontier_spill=True, capacity=12,
+    )
+    solo_cfg = SolveConfig(
+        num_workers=4, steps_per_round=2, chunk_rounds=2,
+        frontier_spill=True, capacity=16, checkpoint_every=2,
+    )
+    svc_sess = SolverSession("vertex_cover", config=svc_cfg, cache=cache)
+    solo_sess = SolverSession("vertex_cover", config=solo_cfg, cache=cache)
+
+    def reference():
+        with tempfile.TemporaryDirectory() as d1, \
+                tempfile.TemporaryDirectory() as d2:
+            ref_svc, _ = _run_service(svc_sess, graphs, d1)
+            ref_solo = _run_solo(solo_sess, solo_g, d2)
+        return ref_svc, ref_solo
+
+    def chaos():
+        inj_svc = FaultInjector(FaultPlan(seed=0, events=_service_events()))
+        inj_solo = FaultInjector(FaultPlan(seed=1, events=_solo_events()))
+        with tempfile.TemporaryDirectory() as d1, \
+                tempfile.TemporaryDirectory() as d2:
+            out_svc, svc = _run_service(
+                svc_sess, graphs, d1, injector=inj_svc
+            )
+            out_solo = _run_solo(solo_sess, solo_g, d2, injector=inj_solo)
+        return out_svc, out_solo, svc, inj_svc, inj_solo
+
+    # warm every executable BOTH trajectories touch (incl. the stall
+    # write-back and crash re-admission paths) so the timed walls compare
+    # steady-state recovery cost, not one-time jit compiles; the chaos
+    # trajectory is chunk-clocked, so the warm pass is bit-identical to
+    # the timed one
+    reference()
+    chaos()
+    t0 = time.perf_counter()
+    ref_svc, ref_solo = reference()
+    ref_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out_svc, out_solo, svc, inj_svc, inj_solo = chaos()
+    chaos_wall = time.perf_counter() - t0
+
+    # -- the gate claims, asserted ----------------------------------------
+    assert sorted(out_svc) == sorted(ref_svc), "tickets were lost"
+    for t in ref_svc:
+        a, b = ref_svc[t], out_svc[t]
+        assert (a.best_size, tuple(a.best_sol)) == (
+            b.best_size, tuple(b.best_sol)
+        ), f"ticket {t}: {b.best_size} under faults vs {a.best_size} clean"
+        assert b.stats.overflow_count == 0, f"ticket {t} dropped tasks"
+    assert (ref_solo.best_size, tuple(ref_solo.best_sol)) == (
+        out_solo.best_size, tuple(out_solo.best_sol)
+    ), "solo solve diverged under faults"
+    assert out_solo.stats.overflow_count == 0
+
+    injected = {
+        k: inj_svc.injected[k] + inj_solo.injected[k] for k in FAULT_KINDS
+    }
+    recovered = {
+        k: inj_svc.recovered[k] + inj_solo.recovered[k] for k in FAULT_KINDS
+    }
+    all_kinds = all(injected[k] >= 1 for k in FAULT_KINDS)
+    assert all_kinds, f"fault kinds not covered: {injected}"
+    assert injected == recovered, (
+        f"unrecovered faults: injected {injected} vs recovered {recovered}"
+    )
+    for inj in (inj_svc, inj_solo):
+        assert inj.report()["pending"] == 0, "scheduled faults never fired"
+
+    wall_ratio = chaos_wall / max(ref_wall, 1e-9)
+    assert wall_ratio <= MAX_WALL_RATIO, (
+        f"recovery took {wall_ratio:.2f}x the fault-free wall "
+        f"(budget {MAX_WALL_RATIO}x) — self-healing is no longer cheap"
+    )
+
+    s = svc.stats()
+    out = dict(
+        instances=count + 1,
+        faults_injected=sum(injected.values()),
+        faults_recovered=sum(recovered.values()),
+        retries=inj_svc.retries + inj_solo.retries,
+        lanes_quarantined=int(s["lanes_quarantined"]),
+        injected_by_kind={k: int(v) for k, v in injected.items()},
+        all_kinds_covered=bool(all_kinds),
+        bit_identical=True,  # asserted above — recorded for the baseline pin
+        no_drop=True,
+        ref_wall_s=round(ref_wall, 3),
+        chaos_wall_s=round(chaos_wall, 3),
+        wall_ratio=round(wall_ratio, 2),
+    )
+    print(
+        f"chaos gate: {out['faults_injected']} faults over "
+        f"{out['instances']} instances, all recovered "
+        f"({out['retries']} retries, {out['lanes_quarantined']} lanes "
+        f"quarantined), bit-identical at {out['wall_ratio']}x the "
+        f"fault-free wall"
+    )
+    return out
+
+
+if __name__ == "__main__":
+    run()

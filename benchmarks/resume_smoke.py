@@ -9,7 +9,13 @@ survivors via :meth:`SolverSession.resume` — asserting the final result is
 bit-identical to the baseline (modulo wall-clock and the durability
 counters, which are outside the contract).
 
-A second kill cycle runs the same contract MID-SPILL: a saturating
+A double-kill cycle then SIGKILLs the RECOVERY itself: a second child
+resumes from the survivors while continuing to checkpoint into the same
+directory, is killed again once a newer generation is durable, and the
+final in-process resume must still be bit-identical — checkpoints written
+by a recovering process are as good as any other.
+
+A further kill cycle runs the same contract MID-SPILL: a saturating
 ``frontier_spill`` solve whose checkpoints carry a non-empty cold tier —
 the resumed solve must land bit-identically INCLUDING the spill counters
 (``spilled_tasks`` / ``readmitted_tasks``), proving the host cold tier
@@ -44,10 +50,20 @@ RESUME_JSON = os.path.join(OUT_DIR, "RESUME_smoke.json")
 # the one deterministic workload both processes build (seeded generator);
 # the spill variant pins a saturating capacity so checkpoints mid-solve
 # carry a non-empty cold tier
-def _workload(smoke: bool, spill: bool = False):
+def _workload(smoke: bool, spill: bool = False, deep: bool = False):
     from repro.api import SolveConfig
     from repro.graphs.generators import erdos_renyi
 
+    if deep:
+        # the double-kill cycle wants many chunks REMAINING after the first
+        # kill, so the recovery child demonstrably writes new generations
+        # before it too is killed
+        g = erdos_renyi(44, 0.25, seed=5)
+        cfg = SolveConfig(
+            num_workers=4, steps_per_round=2, chunk_rounds=1,
+            checkpoint_every=1,
+        )
+        return g, cfg
     if spill:
         g = erdos_renyi(40, 0.28, seed=0)
         cfg = SolveConfig(
@@ -63,10 +79,22 @@ def _workload(smoke: bool, spill: bool = False):
     return g, cfg
 
 
-def _child(ckpt_dir: str, smoke: bool, spill: bool = False) -> None:
+def _child(
+    ckpt_dir: str,
+    smoke: bool,
+    spill: bool = False,
+    resume: bool = False,
+    deep: bool = False,
+) -> None:
     from repro.api import SolverSession
 
-    g, cfg = _workload(smoke, spill)
+    if resume:
+        # recovery child: resume from the survivors AND keep checkpointing
+        # into the same directory — so the parent can SIGKILL it again
+        # mid-recovery
+        SolverSession.resume(ckpt_dir, checkpoint_dir=ckpt_dir)
+        return
+    g, cfg = _workload(smoke, spill, deep)
     SolverSession(config=cfg).solve(g, checkpoint_dir=ckpt_dir)
 
 
@@ -119,6 +147,71 @@ def _kill_and_resume(smoke: bool, cache, spill: bool = False):
     return resumed, step, killed_mid_solve, resume_wall
 
 
+def _kill_mid_recovery(smoke: bool, cache):
+    """The double-kill cycle: SIGKILL the first child at its first durable
+    step, then launch a RECOVERY child (it resumes from the survivors while
+    continuing to checkpoint into the same directory) and SIGKILL that one
+    too once it has written a newer generation — the final in-process
+    resume must still land bit-identically.  Returns (resumed_result,
+    first_kill_step, recovery_kill_step, recovery_killed_mid_solve)."""
+    from repro.api import SolverSession
+    from repro.checkpoint.store import latest_step
+
+    d = tempfile.mkdtemp(prefix="resume_smoke_kill2_")
+    try:
+        env = {**os.environ, "PYTHONPATH": "src"}
+        base_argv = (
+            [sys.executable, "-m", "benchmarks.resume_smoke",
+             "--child", "--dir", d, "--deep"]
+            + (["--smoke"] if smoke else [])
+        )
+        proc = subprocess.Popen(base_argv, env=env)
+        deadline = time.time() + 300
+        while time.time() < deadline:
+            if latest_step(d) is not None:
+                proc.send_signal(signal.SIGKILL)
+                proc.wait()
+                break
+            if proc.poll() is not None:
+                break
+            time.sleep(0.002)
+        else:
+            proc.kill()
+            proc.wait()
+            raise RuntimeError("child produced no checkpoint within 300s")
+        step1 = latest_step(d)
+        assert step1 is not None, "no checkpoint survived the first kill"
+
+        # recovery child: resumes from step1 and keeps checkpointing; kill
+        # it again as soon as a NEWER generation is durable (mid-recovery).
+        # If the remaining work finishes before that, the cycle degrades to
+        # a plain resume — recorded, not failed.
+        proc = subprocess.Popen(base_argv + ["--resume"], env=env)
+        deadline = time.time() + 300
+        killed_mid_recovery = False
+        while time.time() < deadline:
+            latest = latest_step(d)
+            if latest is not None and latest > step1:
+                proc.send_signal(signal.SIGKILL)
+                proc.wait()
+                killed_mid_recovery = True
+                break
+            if proc.poll() is not None:
+                break  # recovery finished before writing a newer step
+            time.sleep(0.002)
+        else:
+            proc.kill()
+            proc.wait()
+            raise RuntimeError("recovery child made no progress within 300s")
+        step2 = latest_step(d)
+        assert step2 is not None and step2 >= step1
+
+        resumed = SolverSession.resume(d, cache=cache, checkpoint_dir=None)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    return resumed, step1, step2, killed_mid_recovery
+
+
 def run(smoke: bool = False) -> dict:
     from repro.api import PlaneCache, SolverSession
     from repro.checkpoint.store import latest_step
@@ -159,6 +252,20 @@ def run(smoke: bool = False) -> dict:
     assert resumed.stats.transfer_bytes_total == base.stats.transfer_bytes_total
     assert (np.asarray(resumed.best_sol) == np.asarray(base.best_sol)).all()
 
+    # double-kill cycle: SIGKILL the solve, then SIGKILL the recovery
+    # itself mid-checkpoint — the second-generation survivors must still
+    # resume bit-identically (checkpoints are valid at EVERY boundary,
+    # including ones written by a recovering process)
+    g_dp, cfg_dp = _workload(smoke, deep=True)
+    base_dp = SolverSession(config=cfg_dp, cache=cache).solve(g_dp)
+    res2, kill1_step, kill2_step, killed_mid_recovery = _kill_mid_recovery(
+        smoke, cache
+    )
+    assert res2.best_size == base_dp.best_size
+    assert res2.rounds == base_dp.rounds
+    assert res2.nodes_expanded == base_dp.nodes_expanded
+    assert (np.asarray(res2.best_sol) == np.asarray(base_dp.best_sol)).all()
+
     # second cycle: SIGKILL with a live cold tier (frontier_spill on a
     # saturating capacity) — resume must replay the spill pump exactly
     g_sp, cfg_sp = _workload(smoke, spill=True)
@@ -194,6 +301,10 @@ def run(smoke: bool = False) -> dict:
         checkpoints_written=int(writes),
         checkpoint_bytes=int(ckpt_bytes),
         resume_wall_s=round(resume_wall, 3),
+        recovery_first_kill_step=int(kill1_step),
+        recovery_second_kill_step=int(kill2_step),
+        killed_mid_recovery=killed_mid_recovery,
+        recovery_bit_identical=True,
         spill_killed_at_step=int(sp_step),
         spill_killed_mid_solve=sp_killed,
         spill_resumed_best=int(res_sp.best_size),
@@ -208,6 +319,15 @@ def run(smoke: bool = False) -> dict:
         f"checkpoint {out['checkpoint_bytes']}B, write overhead "
         f"{out['checkpoint_overhead_pct']}% at every-chunk cadence, resume "
         f"{out['resume_wall_s']}s"
+    )
+    second = (
+        f"SIGKILL the recovery at step {kill2_step}"
+        if killed_mid_recovery
+        else "recovery finished before a second kill landed"
+    )
+    print(
+        f"mid-recovery kill: SIGKILL at step {kill1_step}, then {second}; "
+        f"final resume bit-identical"
     )
     print(
         f"mid-spill kill: SIGKILL at step {sp_step} with a live cold tier, "
@@ -229,9 +349,11 @@ def main(argv=None) -> None:
     ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--dir", default=None, help=argparse.SUPPRESS)
     ap.add_argument("--spill", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--resume", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--deep", action="store_true", help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
     if args.child:
-        _child(args.dir, args.smoke, args.spill)
+        _child(args.dir, args.smoke, args.spill, args.resume, args.deep)
     else:
         run(args.smoke)
 

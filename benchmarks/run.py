@@ -10,6 +10,7 @@
   explore_throughput fused vs reference exploration plane, nodes/sec (gated)
   serve_load        continuous-admission service vs fixed batching (gated)
   spill_throughput  hierarchical frontier memory: no-drop + wall gate
+  chaos_smoke       seeded fault schedule: bit-identical self-healing gate
   resume_smoke      SIGKILL mid-solve + bit-identical resume (durability gate)
   balancer_bench    beyond-paper serving balancer
   kernel_bench      kernel arithmetic-intensity table
@@ -35,6 +36,7 @@ import time
 from benchmarks import (
     balancer_bench,
     batch_throughput,
+    chaos_smoke,
     clique_smoke,
     encoding_bytes,
     engine_throughput,
@@ -58,6 +60,7 @@ ALL = {
     "explore_throughput": explore_throughput,
     "serve_load": serve_load,
     "spill_throughput": spill_throughput,
+    "chaos_smoke": chaos_smoke,
     "resume_smoke": resume_smoke,
     "balancer_bench": balancer_bench,
     "kernel_bench": kernel_bench,
@@ -67,7 +70,7 @@ ALL = {
 # kept fast enough for a per-PR CI job; full runs remain opt-in by name
 SMOKE_DEFAULT = (
     "encoding_bytes", "batch_throughput", "clique_smoke", "session_warm",
-    "explore_throughput", "serve_load", "spill_throughput",
+    "explore_throughput", "serve_load", "spill_throughput", "chaos_smoke",
 )
 
 # generated artifacts live under benchmarks/out/ (gitignored); only the

@@ -43,7 +43,7 @@ from repro.api.result import (
     SolveResult,
     SolveStats,
 )
-from repro.api.service import AsyncSolveService, SolveService
+from repro.api.service import AsyncSolveService, SolveService, SolveTimeout
 from repro.api.session import SolverSession, solve_stream_session
 from repro.checkpoint.solve import CheckpointError, SolveCheckpoint
 
@@ -62,6 +62,7 @@ __all__ = [
     "SolveResult",
     "SolveService",
     "SolveStats",
+    "SolveTimeout",
     "SolverSession",
     "get_backend",
     "known_backends",

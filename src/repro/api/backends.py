@@ -59,7 +59,8 @@ def _solo_fingerprint(spec, g, cfg):
 
 
 def _write_solo_checkpoint(
-    spec, g, cfg, fingerprint, state, rounds, spill=None
+    spec, g, cfg, fingerprint, state, rounds, spill=None,
+    retry=None, fault_hook=None,
 ) -> None:
     """One atomic SolveCheckpoint of a solo solve at a chunk boundary."""
     from repro.checkpoint import solve as _ckpt
@@ -76,7 +77,7 @@ def _write_solo_checkpoint(
     if spill is not None:
         ck.arrays.update(spill.to_flat())
     ck.pack_graphs([0], [g])
-    ck.save(cfg.checkpoint_dir, rounds)
+    ck.save(cfg.checkpoint_dir, rounds, retry=retry, fault_hook=fault_hook)
 
 
 def solve_spmd(
@@ -87,6 +88,7 @@ def solve_spmd(
     *,
     initial_state=None,
     mesh=None,
+    injector=None,
 ):
     """One instance on the SPMD engine; returns a legacy ``EngineResult``
     (the session wraps it into the unified schema, the engine shim returns
@@ -96,9 +98,19 @@ def solve_spmd(
     :class:`~repro.checkpoint.solve.SolveCheckpoint` is written atomically
     every ``cfg.checkpoint_every`` chunks at the host-sync boundary (step
     number = rounds completed); with ``cfg.resume_from`` set, the solve
-    restores that state (fingerprint-checked) and continues — the loop is
-    deterministic, so the final result is bit-identical to an
-    uninterrupted run (modulo ``wall_s``).
+    restores the newest INTACT generation of that state
+    (fingerprint-checked, falling back past corrupt generations with a
+    warning) and continues — the loop is deterministic, so the final
+    result is bit-identical to an uninterrupted run (modulo ``wall_s``).
+
+    Robustness: ``injector`` (a :class:`repro.faults.FaultInjector`)
+    exercises the recovery machinery at the host-sync boundaries only —
+    a worker crash discards the device state and rebuilds it from the
+    last good checkpoint (or the Algorithm-7 startup placement when the
+    solve is not durable), cold-tier corruption is healed by checksum +
+    redelivery inside the spiller, and checkpoint I/O errors retry under
+    the injector's deterministic backoff policy.  Recovery re-executes a
+    deterministic prefix, so the final result stays bit-identical.
     """
     k = cfg.solo_k()
     W = n_words(g.n)
@@ -107,11 +119,21 @@ def solve_spmd(
     data = problems_base.make_data(spec, g)
     pad = make_codec(cfg.codec, g.n, problem=spec).pad_words
 
+    io_retry = injector.retry_policy() if injector is not None else None
+    io_hook = injector.io_hook if injector is not None else None
+
     fingerprint = (
         _solo_fingerprint(spec, g, cfg)
         if (cfg.checkpoint_dir or cfg.resume_from)
         else None
     )
+
+    def build_startup():
+        s = jax.vmap(
+            lambda _: _engine.make_worker_state(cap, W, initial_best)
+        )(jnp.arange(cfg.num_workers))
+        return _engine._scatter_startup(s, spec, g, cfg.num_workers)
+
     rounds = 0
     resumed_from = None
     resume_arrays = None
@@ -121,25 +143,25 @@ def solve_spmd(
         from repro.checkpoint import solve as _ckpt
         from repro.core.superstep import worker_state_from_flat
 
-        ck = _ckpt.SolveCheckpoint.load(cfg.resume_from)
+        ck = _ckpt.SolveCheckpoint.load_latest_good(
+            cfg.resume_from,
+            expected_fingerprint=fingerprint,
+            what=f"solve({spec.name})",
+            retry=io_retry,
+            fault_hook=io_hook,
+        )
         if ck.kind != "solo":
             raise _ckpt.CheckpointError(
                 f"{cfg.resume_from} holds a {ck.kind!r} checkpoint; "
                 f"solve() resumes 'solo' checkpoints only"
             )
-        _ckpt.require_fingerprint(
-            ck, fingerprint, what=f"solve({spec.name})"
-        )
         state = worker_state_from_flat(ck.arrays)
         rounds = ck.rounds
         resumed_from = cfg.resume_from
         resume_arrays = ck.arrays
         cap = int(state.frontier.masks.shape[-2])
     elif initial_state is None:
-        state = jax.vmap(
-            lambda _: _engine.make_worker_state(cap, W, initial_best)
-        )(jnp.arange(cfg.num_workers))
-        state = _engine._scatter_startup(state, spec, g, cfg.num_workers)
+        state = build_startup()
     else:
         state = initial_state
         cap = int(state.frontier.masks.shape[-2])
@@ -158,7 +180,7 @@ def solve_spmd(
             )
         from repro.core.spill import FrontierSpiller, make_spiller
 
-        spill = make_spiller(cfg, spec, g, cap, cfg.num_workers)
+        spill = make_spiller(cfg, spec, g, cap, cfg.num_workers, injector)
         if resume_arrays is not None and FrontierSpiller.present_in(
             resume_arrays
         ):
@@ -220,6 +242,57 @@ def solve_spmd(
                 frontier, hot = spill.pump_frontier(state.frontier)
                 state = state._replace(frontier=frontier)
                 done = done and int(hot.sum()) == 0
+        if injector is not None:
+            injector.step_boundary()
+            if injector.take_crash():
+                # the worker plane died at this boundary: its device state
+                # is gone.  Rebuild from the last good checkpoint when the
+                # solve is durable, else replay from the deterministic
+                # Algorithm-7 startup placement — both re-execute a prefix
+                # of the SAME trajectory, so the final answer is unchanged.
+                from repro.checkpoint import store as _store
+
+                if (
+                    cfg.checkpoint_dir is not None
+                    and _store.latest_step(cfg.checkpoint_dir) is not None
+                ):
+                    from repro.checkpoint import solve as _ckpt
+                    from repro.core.superstep import worker_state_from_flat
+
+                    ck = _ckpt.SolveCheckpoint.load_latest_good(
+                        cfg.checkpoint_dir,
+                        expected_fingerprint=fingerprint,
+                        what=f"solve({spec.name}) crash recovery",
+                        retry=io_retry,
+                        fault_hook=io_hook,
+                    )
+                    state = worker_state_from_flat(ck.arrays)
+                    rounds = ck.rounds
+                    if spill is not None:
+                        from repro.core.spill import (
+                            FrontierSpiller,
+                            make_spiller,
+                        )
+
+                        spill = make_spiller(
+                            cfg, spec, g, cap, cfg.num_workers, injector
+                        )
+                        if FrontierSpiller.present_in(ck.arrays):
+                            spill.load_flat(ck.arrays)
+                elif initial_state is not None:
+                    state = initial_state
+                    rounds = 0
+                else:
+                    state = build_startup()
+                    rounds = 0
+                    if spill is not None:
+                        from repro.core.spill import make_spiller
+
+                        spill = make_spiller(
+                            cfg, spec, g, cap, cfg.num_workers, injector
+                        )
+                injector.note_recovered("crash")
+                done = False
         if done:
             break
         if (
@@ -227,7 +300,8 @@ def solve_spmd(
             and chunks % cfg.checkpoint_every == 0
         ):
             _write_solo_checkpoint(
-                spec, g, cfg, fingerprint, state, rounds, spill
+                spec, g, cfg, fingerprint, state, rounds, spill,
+                retry=io_retry, fault_hook=io_hook,
             )
             checkpoints_written += 1
     wall = time.perf_counter() - t0
@@ -254,7 +328,8 @@ def solve_spmd(
     return r
 
 
-def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
+def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache,
+                    injector=None):
     """B instances on one batched plane; returns a legacy ``BatchResult``.
 
     Identical bucketing/padding/compaction behavior to the legacy
@@ -283,6 +358,7 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
         lane_resume,
         lane_state_from_flat,
         lane_state_to_flat,
+        lane_swap_in,
         slice_lanes,
         step_lanes,
     )
@@ -334,20 +410,26 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
             packed_status=cfg.packed_status,
         )
 
+    io_retry = injector.retry_policy() if injector is not None else None
+    io_hook = injector.io_hook if injector is not None else None
+
     resume_ck = None
     resume_bucket = -1
     if cfg.resume_from is not None:
         from repro.checkpoint import solve as _ckpt
 
-        resume_ck = _ckpt.SolveCheckpoint.load(cfg.resume_from)
+        resume_ck = _ckpt.SolveCheckpoint.load_latest_good(
+            cfg.resume_from,
+            expected_fingerprint=fingerprint,
+            what=f"solve_many({spec.name})",
+            retry=io_retry,
+            fault_hook=io_hook,
+        )
         if resume_ck.kind != "many":
             raise _ckpt.CheckpointError(
                 f"{cfg.resume_from} holds a {resume_ck.kind!r} checkpoint; "
                 f"solve_many() resumes 'many' checkpoints only"
             )
-        _ckpt.require_fingerprint(
-            resume_ck, fingerprint, what=f"solve_many({spec.name})"
-        )
         meta = resume_ck.meta
         results = {
             int(i): _ckpt.engine_result_from_dict(d)
@@ -397,7 +479,8 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
             if sp is not None:
                 ck.arrays.update(sp.to_flat(f"spill{lane}"))
         ck.pack_graphs(range(B), graphs)
-        ck.save(cfg.checkpoint_dir, chunks_total)
+        ck.save(cfg.checkpoint_dir, chunks_total,
+                retry=io_retry, fault_hook=io_hook)
 
     buckets = _engine._bucket_instances(graphs, by_n=(cfg.codec == "basic"))
     for bi, ((W, _), idxs) in enumerate(sorted(buckets.items())):
@@ -425,7 +508,7 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
                 for lane in range(lanes.num_lanes):
                     sp = make_spiller(
                         cfg, spec, graphs[int(lanes.tag[lane])], cap,
-                        cfg.num_workers,
+                        cfg.num_workers, injector,
                     )
                     if FrontierSpiller.present_in(
                         resume_ck.arrays, f"spill{lane}"
@@ -459,7 +542,8 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
             spillers = [None] * len(idxs)
             if cfg.frontier_spill:
                 spillers = [
-                    make_spiller(cfg, spec, graphs[i], cap, cfg.num_workers)
+                    make_spiller(cfg, spec, graphs[i], cap, cfg.num_workers,
+                                 injector)
                     for i in idxs
                 ]
 
@@ -502,6 +586,33 @@ def solve_many_spmd(spec, graphs, cfg: SolveConfig, cache: PlaneCache):
                     if bool(done_h[lane]) and int(hot_lane.sum()) > 0:
                         lanes = lane_resume(lanes, lane)
                         done_h[lane] = False
+            if injector is not None:
+                injector.step_boundary()
+                live_lanes = [
+                    lane for lane in range(lanes.num_lanes)
+                    if not bool(done_h[lane])
+                ]
+                for lane in injector.take_crashes(live_lanes):
+                    # the lane's occupant died with its device state; the
+                    # center still knows WHICH instance was placed there
+                    # (the tag), so re-admission rebuilds it from the
+                    # Algorithm-7 startup placement — a deterministic
+                    # replay whose final result is bit-identical.
+                    oi = int(lanes.tag[lane])
+                    worker = _engine.make_instance_state(
+                        spec, graphs[oi], cfg.num_workers, cap, W,
+                        problems_base.initial_bound(
+                            spec, graphs[oi], cfg.mode, ks[oi]
+                        ),
+                    )
+                    lanes = lane_swap_in(lanes, lane, worker, oi)
+                    done_h[lane] = False
+                    if cfg.frontier_spill:
+                        spillers[lane] = make_spiller(
+                            cfg, spec, graphs[oi], cap, cfg.num_workers,
+                            injector,
+                        )
+                    injector.note_recovered("crash")
             live_h = ~done_h
             if done_h.all():
                 break
@@ -618,12 +729,14 @@ class Backend:
 class SpmdBackend(Backend):
     name = "spmd"
 
-    def solve(self, spec, g, cfg, cache, *, initial_state=None, mesh=None):
-        r = solve_spmd(spec, g, cfg, cache, initial_state=initial_state, mesh=mesh)
+    def solve(self, spec, g, cfg, cache, *, initial_state=None, mesh=None,
+              injector=None):
+        r = solve_spmd(spec, g, cfg, cache, initial_state=initial_state,
+                       mesh=mesh, injector=injector)
         return from_engine_result(r, problem=spec.name, backend=self.name)
 
-    def solve_many(self, spec, graphs, cfg, cache):
-        br = solve_many_spmd(spec, graphs, cfg, cache)
+    def solve_many(self, spec, graphs, cfg, cache, *, injector=None):
+        br = solve_many_spmd(spec, graphs, cfg, cache, injector=injector)
         return BatchSolveResult(
             problem=spec.name,
             backend=self.name,

@@ -79,6 +79,16 @@ class SolveConfig:
     admission: str = "priority"
     # per-tenant cap on simultaneously occupied lanes (None = no fairness cap)
     tenant_max_lanes: Optional[int] = None
+    # -- robustness (repro.faults + the service's self-healing) ---------------
+    # wall-clock budget per request (None = none): queued or on-lane past
+    # this age, the request resolves to a typed SolveTimeout carrying the
+    # partial anytime result — an awaited solve can never hang forever.
+    # Measured on the service's injectable clock (like deadline_s).
+    request_timeout_s: Optional[float] = None
+    # stall watchdog: a live lane whose occupant makes no superstep progress
+    # for this many consecutive chunks is quarantined and its instance
+    # re-admitted from the center's tracked placement
+    lane_stall_chunks: int = 4
     # -- durability (checkpoint/resume via repro.checkpoint.solve) ------------
     # directory for periodic SolveCheckpoints (None = no checkpointing);
     # written atomically every `checkpoint_every` chunks (solo/solve_many)
@@ -144,6 +154,7 @@ class SolveConfig:
             "num_workers", "steps_per_round", "lanes", "donate_k",
             "chunk_rounds", "max_rounds", "batch_size", "service_lanes",
             "checkpoint_every", "max_ticks", "queue_cap_per_p",
+            "lane_stall_chunks",
         ):
             v = getattr(self, name)
             if not isinstance(v, int) or isinstance(v, bool) or v < 1:
@@ -155,6 +166,15 @@ class SolveConfig:
         if self.tenant_max_lanes is not None and self.tenant_max_lanes < 1:
             raise ValueError(
                 "SolveConfig.tenant_max_lanes must be None or >= 1"
+            )
+        if self.request_timeout_s is not None and not (
+            isinstance(self.request_timeout_s, (int, float))
+            and not isinstance(self.request_timeout_s, bool)
+            and self.request_timeout_s > 0
+        ):
+            raise ValueError(
+                f"SolveConfig.request_timeout_s must be None or a positive "
+                f"number of seconds, got {self.request_timeout_s!r}"
             )
         if not 0 <= self.compact_threshold <= 1:
             raise ValueError(

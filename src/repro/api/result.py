@@ -85,6 +85,14 @@ class ServiceStats(_DictAccessShim):
     # the wall-clock twin of deadline_hit: the request's deadline_s elapsed
     # (measured on the service's injected clock) before the solve finished
     wall_deadline_hit: bool = False
+    # -- robustness (repro.faults): the self-healing ledger for THIS ticket ---
+    # faults that hit the request (lane crash/stall windows), recoveries
+    # (re-queue + bit-identical re-admission, cleared stall windows), times
+    # its lane was quarantined, and extra payload-delivery attempts spent
+    faults_injected: int = 0
+    faults_recovered: int = 0
+    lanes_quarantined: int = 0
+    retries: int = 0
 
     @classmethod
     def from_dict(cls, d: dict) -> "ServiceStats":

@@ -61,14 +61,38 @@ from repro.core import engine as _engine
 from repro.core.encoding import make_codec
 from repro.core.superstep import (
     lane_retire,
+    lane_slice,
     lane_state_from_flat,
     lane_state_to_flat,
     lane_swap_in,
+    lane_write_back,
     make_vacant_lanes,
     step_lanes,
 )
 from repro.problems import base as problems_base
 from repro.problems.registry import get_problem
+
+
+class SolveTimeout(TimeoutError):
+    """A request exceeded ``SolveConfig.request_timeout_s`` on the
+    service's (injectable) clock.
+
+    Raised by :meth:`SolveService.result` and set as the awaited future's
+    exception by :class:`AsyncSolveService` — so ``await svc.solve(g)``
+    can never hang past the budget.  ``result`` carries the partial
+    anytime :class:`~repro.api.result.SolveResult` when the request was on
+    a lane (stats populated up to the timeout); ``None`` when it timed out
+    still queued.
+    """
+
+    def __init__(self, ticket: int, result=None, waited_s: float = 0.0):
+        self.ticket = ticket
+        self.result = result
+        self.waited_s = waited_s
+        where = "on a lane" if result is not None else "still queued"
+        super().__init__(
+            f"request {ticket} timed out after {waited_s:.3f}s ({where})"
+        )
 
 
 @dataclasses.dataclass
@@ -189,13 +213,41 @@ class _LivePlane:
         # per-lane cold tiers (repro.core.spill), created at admission when
         # cfg.frontier_spill is on; survive chunks, dropped at retire
         self.spillers: list = [None] * B
+        # -- self-healing bookkeeping (repro.faults) --------------------------
+        # quarantined lanes (crashed/stalled occupants were re-queued; the
+        # lane is excluded from admission until rehabilitated, oldest first),
+        # load shedding under repeated faults, and the stall watchdog's
+        # per-lane progress snapshots
+        self.quarantined: list = []
+        self.shed = 0
+        self.fault_hits = 0  # accumulator: every 2 plane faults sheds 1 lane
+        self.fault_free = 0  # consecutive fault-free chunks (heals shedding)
+        self.last_rounds: list = [0] * B
+        self.stall_chunks: list = [0] * B
 
     def occupied_count(self) -> int:
         return int(self.lanes.occupied().sum())
 
+    def admit_limit(self) -> int:
+        """Simultaneously usable lanes under quarantine + load shedding
+        (never below one — a degraded plane still makes progress)."""
+        return max(
+            1, self.lanes.num_lanes - len(self.quarantined) - self.shed
+        )
+
     def vacant_lane(self) -> Optional[int]:
+        if self.occupied_count() >= self.admit_limit():
+            return None
         free = np.flatnonzero(~self.lanes.occupied())
-        return int(free[0]) if free.size else None
+        for lane in free:
+            if int(lane) not in self.quarantined:
+                return int(lane)
+        # every free lane sits quarantined yet the (floor-clamped) budget
+        # admits: rehabilitate the oldest quarantine, so repeated faults
+        # can never darken the whole plane
+        if free.size and self.quarantined:
+            return self.quarantined.pop(0)
+        return None
 
 
 class SolveService:
@@ -219,11 +271,17 @@ class SolveService:
         *,
         cache: Optional[PlaneCache] = None,
         clock=None,
+        injector=None,
     ):
         self.spec = get_problem(problem)
         # monotonic-seconds source for submit/admit/deadline bookkeeping;
         # injectable so wall-clock deadline tests advance time themselves
         self._clock = clock if clock is not None else time.perf_counter
+        # optional repro.faults.FaultInjector: fires its plan at this
+        # service's chunk boundaries; the quarantine/re-queue machinery
+        # below is the paired recovery (None = nothing injected, but the
+        # watchdog and timeout sweeps still protect against organic faults)
+        self.injector = injector
         self.config = config if config is not None else SolveConfig()
         if self.config.use_mesh:
             raise ValueError(
@@ -235,9 +293,12 @@ class SolveService:
             self.config.admission, self.config.tenant_max_lanes
         )
         self._planes: dict = {}  # (W, n_exact|None) -> _LivePlane
-        self._results: dict = {}  # ticket -> SolveResult
+        self._results: dict = {}  # ticket -> SolveResult | SolveTimeout
         self._next_ticket = 0
         self._t0 = self._clock()
+        # ticket -> [faults_injected, faults_recovered, lanes_quarantined]
+        # (the per-request slice of the self-healing ledger)
+        self._req_faults: dict = {}
         self._stats = {
             "submitted": 0,
             "completed": 0,
@@ -248,6 +309,8 @@ class SolveService:
             "live_lane_chunks": 0,
             "wait_s_total": 0.0,
             "residency_s_total": 0.0,
+            "lanes_quarantined": 0,
+            "timed_out": 0,
         }
 
     # -- submission ------------------------------------------------------------
@@ -307,8 +370,8 @@ class SolveService:
         With ``config.checkpoint_dir`` set, every ``checkpoint_every``-th
         step also writes a service checkpoint (see :meth:`checkpoint`)."""
         self._stats["steps"] += 1
+        completed = self._sweep_queue_timeouts()
         self._admit()
-        completed = []
         for plane in self._planes.values():
             if plane.occupied_count() == 0:
                 continue  # an all-vacant plane costs nothing
@@ -339,8 +402,13 @@ class SolveService:
 
     def result(self, ticket: int) -> SolveResult:
         """Pop a finished ticket's result; ``KeyError`` if the ticket is
-        unknown or still queued/solving (step/drain first)."""
-        return self._results.pop(ticket)
+        unknown or still queued/solving (step/drain first).  A ticket that
+        hit ``config.request_timeout_s`` raises its :class:`SolveTimeout`
+        (carrying the partial anytime result when one exists)."""
+        out = self._results.pop(ticket)
+        if isinstance(out, SolveTimeout):
+            raise out
+        return out
 
     def ready(self, ticket: int) -> bool:
         return ticket in self._results
@@ -383,6 +451,13 @@ class SolveService:
         n_done = s["completed"]
         s["wait_s_mean"] = s["wait_s_total"] / n_done if n_done else 0.0
         s["residency_s_mean"] = s["residency_s_total"] / n_done if n_done else 0.0
+        # the self-healing ledger (zeros without an injector: organic
+        # quarantines/timeouts still show via lanes_quarantined/timed_out)
+        inj = self.injector
+        s["faults_injected"] = inj.faults_injected if inj is not None else 0
+        s["faults_recovered"] = inj.faults_recovered if inj is not None else 0
+        s["retries"] = inj.retries if inj is not None else 0
+        s["lanes_shed"] = sum(p.shed for p in self._planes.values())
         return s
 
     def cache_stats(self) -> dict:
@@ -464,7 +539,14 @@ class SolveService:
                 "stats": dict(self._stats),
             }
         )
-        return ck.save(directory, self._stats["steps"], blocking=blocking)
+        inj = self.injector
+        return ck.save(
+            directory,
+            self._stats["steps"],
+            blocking=blocking,
+            retry=inj.retry_policy() if inj is not None else None,
+            fault_hook=inj.io_hook if inj is not None else None,
+        )
 
     @classmethod
     def restore(
@@ -484,7 +566,13 @@ class SolveService:
         """
         from repro.checkpoint import solve as _ckpt
 
-        ck = _ckpt.SolveCheckpoint.load(path, step)
+        if step is None:
+            # walk the retained generations (latest first, each with its
+            # .prev twin) past corrupt/truncated snapshots — same fallback
+            # ladder as solo/batch resume
+            ck = _ckpt.SolveCheckpoint.load_latest_good(path, what="service")
+        else:
+            ck = _ckpt.SolveCheckpoint.load(path, step)
         if ck.kind != "service":
             raise _ckpt.CheckpointError(
                 f"{path} holds a {ck.kind!r} checkpoint; "
@@ -594,11 +682,14 @@ class SolveService:
             )
         plane.requests[lane] = req
         plane.admit_s[lane] = self._clock() - self._t0
+        plane.last_rounds[lane] = 0
+        plane.stall_chunks[lane] = 0
         if cfg.frontier_spill:
             from repro.core.spill import make_spiller
 
             plane.spillers[lane] = make_spiller(
-                cfg, spec, g, plane.cap, cfg.num_workers
+                cfg, spec, g, plane.cap, cfg.num_workers,
+                injector=self.injector,
             )
         self.cache.note(
             "batch",
@@ -609,18 +700,131 @@ class SolveService:
             (plane.n_max, plane.W, plane.cap, cfg.num_workers, plane.lanes.num_lanes),
         )
 
+    def _sweep_queue_timeouts(self) -> list:
+        """Resolve queued requests past ``config.request_timeout_s`` to a
+        typed :class:`SolveTimeout` (no partial result — never admitted)."""
+        budget = self.config.request_timeout_s
+        if budget is None or not len(self.scheduler):
+            return []
+        now = self._clock() - self._t0
+        out = []
+        for req in self.scheduler.ordered():
+            waited = now - req.submit_s
+            if waited >= budget:
+                self.scheduler.remove(req)
+                self._req_faults.pop(req.ticket, None)
+                self._results[req.ticket] = SolveTimeout(
+                    req.ticket, result=None, waited_s=waited
+                )
+                self._stats["timed_out"] += 1
+                out.append(req.ticket)
+        return out
+
+    def _quarantine(
+        self, plane: _LivePlane, lane: int, *, injected: int, recovered: int
+    ) -> None:
+        """Retire a crashed/stalled lane, quarantine it, and push its
+        occupant back through the scheduler.  The old ticket sorts first in
+        both admission orders, so re-admission is deterministic — and since
+        :meth:`_admit_into` rebuilds the instance from the same
+        ``make_instance_state`` startup placement (fresh spiller, full
+        replay), the re-run's result is bit-identical to an undisturbed
+        solve."""
+        req = plane.requests[lane]
+        plane.lanes = lane_retire(plane.lanes, lane)
+        plane.requests[lane] = None
+        plane.spillers[lane] = None
+        plane.stall_chunks[lane] = 0
+        if lane not in plane.quarantined:
+            plane.quarantined.append(lane)
+        self._stats["lanes_quarantined"] += 1
+        if req is not None:
+            self.scheduler.push(req)
+            ledger = self._req_faults.setdefault(req.ticket, [0, 0, 0])
+            ledger[0] += injected
+            ledger[1] += recovered
+            ledger[2] += 1
+
     def _step_plane(self, plane: _LivePlane) -> list:
+        inj = self.injector
         occupied_before = plane.lanes.occupied()
         self._stats["chunk_calls"] += 1
         self._stats["lane_chunks"] += plane.lanes.num_lanes
         self._stats["live_lane_chunks"] += int(occupied_before.sum())
+
+        n_faults = 0
+        frozen: dict = {}
+        if inj is not None:
+            inj.step_boundary()
+            live = [int(l) for l in np.flatnonzero(plane.lanes.occupied())]
+            # lane crashes: the occupant's device state is lost at this
+            # boundary — quarantine the lane and re-queue the request (the
+            # recovery: a bit-identical replay from startup placement)
+            for lane in inj.take_crashes(live):
+                self._quarantine(plane, lane, injected=1, recovered=1)
+                inj.note_recovered("crash")
+                n_faults += 1
+            # stalled lanes: snapshot before the chunk, write back after —
+            # the lane observably makes no progress, the compiled plane is
+            # untouched, and the watchdog below eventually quarantines it
+            live = [int(l) for l in np.flatnonzero(plane.lanes.occupied())]
+            for lane in inj.stalled_lanes(live):
+                frozen[lane] = (
+                    lane_slice(plane.lanes, lane),
+                    plane.lanes.done[lane],
+                    plane.lanes.rounds[lane],
+                )
+
+        occupied = np.array(plane.lanes.occupied())
         plane.lanes, _ran, hot = step_lanes(
             plane.plane, plane.datas, plane.lanes, plane.fpt_bounds
         )
+        for lane, (worker, done_snap, rounds_snap) in frozen.items():
+            plane.lanes = lane_write_back(
+                plane.lanes, lane, worker, done_snap, rounds_snap
+            )
         done_h, rounds_h = map(
             np.asarray, jax.device_get((plane.lanes.done, plane.lanes.rounds))
         )
         done_h = np.array(done_h)
+
+        # stall watchdog: an occupied, unfinished lane whose round counter
+        # made no progress for lane_stall_chunks consecutive chunks is
+        # quarantined and its instance re-queued (this is also what clears
+        # injected stall windows — organic stalls heal the same way)
+        for lane in [int(l) for l in np.flatnonzero(occupied & ~done_h)]:
+            if int(rounds_h[lane]) == plane.last_rounds[lane]:
+                plane.stall_chunks[lane] += 1
+            else:
+                plane.stall_chunks[lane] = 0
+                plane.last_rounds[lane] = int(rounds_h[lane])
+            if plane.stall_chunks[lane] >= self.config.lane_stall_chunks:
+                cleared = inj.clear_stall(lane) if inj is not None else 0
+                self._quarantine(
+                    plane, lane, injected=cleared, recovered=cleared
+                )
+                occupied[lane] = False
+                frozen.pop(lane, None)
+                n_faults += 1
+
+        # graceful degradation: every 2 plane faults sheds one admission
+        # slot (floor of one usable lane); 8 consecutive fault-free chunks
+        # heal one shed slot, then rehabilitate quarantined lanes
+        if n_faults:
+            plane.fault_free = 0
+            plane.fault_hits += n_faults
+            while plane.fault_hits >= 2:
+                plane.fault_hits -= 2
+                if plane.shed < plane.lanes.num_lanes - 1:
+                    plane.shed += 1
+        else:
+            plane.fault_free += 1
+            if plane.fault_free >= 8:
+                plane.fault_free = 0
+                if plane.shed > 0:
+                    plane.shed -= 1
+                elif plane.quarantined:
+                    plane.quarantined.pop(0)
 
         if self.config.frontier_spill:
             # the spill pump runs BEFORE the finished verdict: a lane that
@@ -630,8 +834,10 @@ class SolveService:
 
             hot_h = np.array(jax.device_get(hot))
             best_h = bounds_h = None
-            for lane in np.flatnonzero(occupied_before):
+            for lane in np.flatnonzero(occupied):
                 sp = plane.spillers[lane]
+                if int(lane) in frozen:
+                    continue  # stalled this chunk: its hot counts are stale
                 if sp is None or not sp.wants_pump(
                     hot_h[lane], bool(done_h[lane])
                 ):
@@ -653,10 +859,12 @@ class SolveService:
                     done_h[lane] = False
 
         now = self._clock() - self._t0
-        finished = np.flatnonzero(occupied_before & done_h)
+        timeout_s = self.config.request_timeout_s
+        finished = np.flatnonzero(occupied & done_h)
         over_wall = set()
+        timed_out = set()
         over_budget = []
-        for lane in np.flatnonzero(occupied_before & ~done_h):
+        for lane in np.flatnonzero(occupied & ~done_h):
             req = plane.requests[lane]
             if rounds_h[lane] >= min(
                 req.deadline or self.config.max_rounds, self.config.max_rounds
@@ -668,6 +876,9 @@ class SolveService:
             ):
                 over_budget.append(lane)
                 over_wall.add(int(lane))
+            elif timeout_s is not None and now - req.submit_s >= timeout_s:
+                over_budget.append(lane)
+                timed_out.add(int(lane))
         if len(finished) == 0 and not over_budget:
             return []
 
@@ -695,6 +906,7 @@ class SolveService:
                 res.stats.spilled_tasks = sp.spilled_total
                 res.stats.readmitted_tasks = sp.readmitted_total
                 res.stats.cold_bytes_peak = sp.cold_bytes_peak
+            fi, fr, fq = self._req_faults.pop(req.ticket, (0, 0, 0))
             res.stats.service = ServiceStats(
                 lane=lane,
                 plane=str(plane.key),
@@ -704,10 +916,21 @@ class SolveService:
                     evicted
                     and req.deadline is not None
                     and lane not in over_wall
+                    and lane not in timed_out
                 ),
                 wall_deadline_hit=lane in over_wall,
+                faults_injected=fi,
+                faults_recovered=fr,
+                lanes_quarantined=fq,
+                retries=sp.delivery_retries if sp is not None else 0,
             )
-            self._results[req.ticket] = res
+            if lane in timed_out:
+                self._results[req.ticket] = SolveTimeout(
+                    req.ticket, result=res, waited_s=now - req.submit_s
+                )
+                self._stats["timed_out"] += 1
+            else:
+                self._results[req.ticket] = res
             completed.append(req.ticket)
             self._stats["completed"] += 1
             self._stats["evicted"] += int(evicted)
@@ -726,6 +949,11 @@ class AsyncSolveService:
     the pump thread-pools :meth:`SolveService.step` so the event loop stays
     responsive while chunks run on device.  Submission and stepping share
     one lock (the service itself is not thread-safe).
+
+    With ``SolveConfig.request_timeout_s`` set, an awaited solve can never
+    hang: a request over budget — queued or on a lane — resolves the
+    future with a :class:`SolveTimeout` exception (carrying the partial
+    anytime result when one exists).
     """
 
     def __init__(self, service: SolveService, idle_sleep_s: float = 0.002):
@@ -780,6 +1008,14 @@ class AsyncSolveService:
             done = await loop.run_in_executor(None, locked_step)
             for ticket in done:
                 fut = self._futures.pop(ticket, None)
-                if fut is not None and not fut.done():
-                    fut.set_result(self.service.result(ticket))
+                if fut is None:
+                    continue
+                try:
+                    res = self.service.result(ticket)
+                except SolveTimeout as exc:
+                    if not fut.done():
+                        fut.set_exception(exc)
+                else:
+                    if not fut.done():
+                        fut.set_result(res)
             await asyncio.sleep(0)

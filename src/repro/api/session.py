@@ -95,12 +95,16 @@ class SolverSession:
         *,
         checkpoint_dir: Optional[str] = None,
         resume_from: Optional[str] = None,
+        **backend_kw,
     ) -> BatchSolveResult:
+        """Solve B instances; ``backend_kw`` passes backend-specific extras
+        (spmd: ``injector`` for fault injection)."""
         return self.backend.solve_many(
             self.problem,
             list(graphs),
             self._call_config(checkpoint_dir, resume_from),
             self.cache,
+            **backend_kw,
         )
 
     def _call_config(self, checkpoint_dir, resume_from) -> SolveConfig:
@@ -140,7 +144,7 @@ class SolverSession:
         """
         from repro.checkpoint.solve import CheckpointError, SolveCheckpoint
 
-        ck = SolveCheckpoint.load(path)
+        ck = SolveCheckpoint.load_latest_good(path, what="session")
         if ck.kind == "service":
             raise CheckpointError(
                 f"{path} holds a service checkpoint; use "
@@ -207,7 +211,7 @@ class SolverSession:
 
     # -- the continuous-batching service ---------------------------------------
 
-    def serve(self, **config_overrides) -> "SolveService":
+    def serve(self, *, injector=None, **config_overrides) -> "SolveService":
         """A :class:`~repro.api.service.SolveService` over this session's
         (problem, config, cache): a live compiled plane whose freed lanes
         re-admit queued instances continuously, instead of the fixed
@@ -229,7 +233,9 @@ class SolverSession:
         cfg = self.config
         if config_overrides:
             cfg = cfg.replace(**config_overrides)
-        return SolveService(self.problem, cfg, cache=self.cache)
+        return SolveService(
+            self.problem, cfg, cache=self.cache, injector=injector
+        )
 
     # -- introspection ---------------------------------------------------------
 

@@ -37,6 +37,7 @@ import dataclasses
 import hashlib
 import json
 import os
+import warnings
 from typing import Optional
 
 import jax
@@ -145,10 +146,13 @@ class SolveCheckpoint:
 
     # -- write -----------------------------------------------------------------
 
-    def save(self, directory: str, step: int, *, blocking: bool = True) -> str:
+    def save(self, directory: str, step: int, *, blocking: bool = True,
+             retry=None, fault_hook=None) -> str:
         """Atomic write through :func:`repro.checkpoint.store.save_checkpoint`
         (unique tmp dir + rename — a kill mid-write never corrupts an
-        existing step)."""
+        existing step; overwriting a step keeps the previous generation).
+        ``retry`` / ``fault_hook`` thread straight into the store's
+        bounded-backoff I/O loop."""
         extra = {
             "schema": SCHEMA_VERSION,
             "kind": self.kind,
@@ -160,23 +164,44 @@ class SolveCheckpoint:
             "meta": self.meta,
         }
         return store.save_checkpoint(
-            directory, step, dict(self.arrays), extra, blocking=blocking
+            directory, step, dict(self.arrays), extra, blocking=blocking,
+            retry=retry, fault_hook=fault_hook,
         )
 
     # -- read ------------------------------------------------------------------
 
     @classmethod
-    def load(cls, path: str, step: Optional[int] = None) -> "SolveCheckpoint":
+    def load(cls, path: str, step: Optional[int] = None, *,
+             retry=None, fault_hook=None) -> "SolveCheckpoint":
         """Load from a checkpoint DIRECTORY (latest step, or ``step=``) or
         directly from one ``.../step_<N>`` dir.  Corrupt/truncated data
-        raises :class:`CheckpointError` naming the path."""
+        raises :class:`CheckpointError` naming the path; transient
+        ``OSError`` I/O failures are retried under ``retry``."""
         directory, step = _resolve_step(path, step)
-        step_dir = os.path.join(directory, f"step_{step}")
-        try:
+        return cls._load_step_dir(
+            os.path.join(directory, f"step_{step}"),
+            retry=retry, fault_hook=fault_hook,
+        )
+
+    @classmethod
+    def _load_step_dir(cls, step_dir: str, *, retry=None,
+                       fault_hook=None) -> "SolveCheckpoint":
+        """Load one concrete step (or ``step_<N>.prev``) directory."""
+
+        def attempt():
+            if fault_hook is not None:
+                fault_hook("read")
             with open(os.path.join(step_dir, "manifest.msgpack"), "rb") as f:
                 manifest = msgpack.unpackb(f.read(), strict_map_key=False)
             with np.load(os.path.join(step_dir, "arrays.npz")) as z:
                 raw = {k: z[k] for k in z.files}
+            return manifest, raw
+
+        try:
+            manifest, raw = store.call_with_retry(
+                attempt, retry, what=f"checkpoint read {step_dir}"
+            )
+            store.verify_checksums(manifest, raw, where=step_dir)
         except FileNotFoundError as e:
             raise CheckpointError(
                 f"incomplete checkpoint at {step_dir}: missing {e.filename}"
@@ -210,6 +235,55 @@ class SolveCheckpoint:
             arrays=arrays,
             meta=extra.get("meta") or {},
         )
+
+    @classmethod
+    def load_latest_good(cls, path: str, *, expected_fingerprint=None,
+                         what: str = "solve", retry=None,
+                         fault_hook=None) -> "SolveCheckpoint":
+        """Load the newest checkpoint generation that is intact (and, when
+        ``expected_fingerprint`` is given, fingerprint-matching).
+
+        Given a checkpoint DIRECTORY, candidate generations are walked most
+        recent first (``step_<N>`` descending, each followed by its
+        retained ``step_<N>.prev``); a corrupt/mismatching generation is
+        skipped with a LOUD warning and the next one is tried.  Only when
+        no good generation remains does the newest generation's error
+        propagate — so a single-generation corruption still fails exactly
+        like :meth:`load`.  An explicit ``.../step_<N>`` path stays
+        strict (no fallback): pointing at one concrete step is a request
+        for THAT state."""
+        base = os.path.basename(os.path.normpath(path))
+        if base.startswith("step_") and not base.endswith(".tmp"):
+            ck = cls.load(path, retry=retry, fault_hook=fault_hook)
+            if expected_fingerprint is not None:
+                require_fingerprint(ck, expected_fingerprint, what=what)
+            return ck
+        candidates = store.generation_dirs(path)
+        if not candidates:
+            raise CheckpointError(f"no checkpoint found under {path}")
+        errors = []
+        for step_dir in candidates:
+            try:
+                ck = cls._load_step_dir(
+                    step_dir, retry=retry, fault_hook=fault_hook
+                )
+                if expected_fingerprint is not None:
+                    require_fingerprint(ck, expected_fingerprint, what=what)
+            except CheckpointError as e:
+                errors.append((step_dir, e))
+                continue
+            if errors:
+                bad = "; ".join(f"{d}: {e}" for d, e in errors)
+                warnings.warn(
+                    f"resuming {what} from an OLDER checkpoint generation "
+                    f"{step_dir} — newer generation(s) were corrupt or "
+                    f"refused ({bad}); recent progress since that "
+                    f"generation will be re-executed",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+            return ck
+        raise errors[0][1]
 
     # -- graph round-trip ------------------------------------------------------
 

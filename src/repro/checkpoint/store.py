@@ -2,13 +2,27 @@
 
 Layout:  <dir>/step_<N>/  arrays.npz  (flattened pytree leaves)
                           manifest.msgpack  (treedef paths, shapes, dtypes,
-                                             step, data-pipeline state)
+                                             step, data-pipeline state,
+                                             per-array CRC32 checksums)
+         <dir>/step_<N>.prev/   the previous generation of the same step
+                                (kept, not clobbered, on overwrite)
 
 * **atomic**: written to a UNIQUE ``step_<N>.<rand>.tmp`` dir then swapped
   into place under a process-wide lock — a crash mid-write never corrupts
   the latest checkpoint, and concurrent writers of the same step (e.g. an
   async save racing a final blocking save) are last-writer-wins instead of
-  colliding on a shared tmp path;
+  colliding on a shared tmp path.  Overwriting an existing step rotates it
+  to ``step_<N>.prev`` instead of deleting it, so one bad write never
+  destroys the last good generation;
+* **checked**: the manifest records a CRC32 per array, so silent bit-rot
+  inside a structurally valid npz is *detected* at load (and the solve
+  loader falls back to the previous good generation, see
+  :mod:`repro.checkpoint.solve`);
+* **retried**: save/load take an optional :class:`RetryPolicy` — bounded
+  exponential backoff with injectable sleep + rng (tests and the fault
+  injector use a virtual clock, production uses ``time.sleep``) — and an
+  optional ``fault_hook(op)`` called at the top of every I/O attempt (the
+  fault injector's entry point);
 * **mesh-agnostic**: leaves are saved unsharded (device_get) and restored
   with ``jax.device_put(leaf, sharding)`` against whatever mesh the restart
   runs on — re-meshing on restart is how elastic scale-up/down works;
@@ -19,11 +33,16 @@ Layout:  <dir>/step_<N>/  arrays.npz  (flattened pytree leaves)
 
 from __future__ import annotations
 
+import dataclasses
 import os
+import random
 import shutil
 import tempfile
 import threading
-from typing import Any, Optional
+import time
+import warnings
+import zlib
+from typing import Any, Callable, Optional
 
 import jax
 import msgpack
@@ -39,6 +58,75 @@ _UMASK = os.umask(0)
 os.umask(_UMASK)
 
 
+# -- bounded retry/backoff -----------------------------------------------------
+
+
+@dataclasses.dataclass(eq=False)
+class RetryPolicy:
+    """Bounded exponential backoff for checkpoint-store I/O.
+
+    ``sleep`` and ``rng`` are injectable: tests and the fault injector pass
+    a virtual clock + seeded ``random.Random`` so retry trajectories are
+    deterministic; production defaults to ``time.sleep`` and a fixed seed
+    (jitter only decorrelates writers, it carries no entropy contract).
+    """
+
+    max_attempts: int = 4
+    base_s: float = 0.05
+    multiplier: float = 2.0
+    jitter: float = 0.25
+    sleep: Callable[[float], None] = time.sleep
+    rng: Optional[random.Random] = None
+    retry_on: tuple = (OSError,)
+    retries: int = 0  # attempts beyond the first, across all wrapped calls
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if self.rng is None:
+            self.rng = random.Random(0)
+
+    def backoff_s(self, attempt: int) -> float:
+        """Delay before retry ``attempt`` (0-based): exponential with
+        multiplicative jitter in ``[1, 1 + jitter]``."""
+        return (
+            self.base_s
+            * (self.multiplier ** attempt)
+            * (1.0 + self.jitter * self.rng.random())
+        )
+
+
+def call_with_retry(fn: Callable[[], Any], policy: Optional[RetryPolicy],
+                    *, what: str = "checkpoint I/O") -> Any:
+    """Run ``fn`` under ``policy`` (None = single attempt, today's
+    behavior).  Only ``policy.retry_on`` exceptions are retried — corrupt
+    *content* (CheckpointError) is not an I/O flake and falls through to
+    the generation-fallback path instead."""
+    if policy is None:
+        return fn()
+    last = None
+    for attempt in range(policy.max_attempts):
+        try:
+            return fn()
+        except policy.retry_on as e:
+            last = e
+            if attempt + 1 >= policy.max_attempts:
+                break
+            delay = policy.backoff_s(attempt)
+            policy.retries += 1
+            warnings.warn(
+                f"{what} failed (attempt {attempt + 1}/"
+                f"{policy.max_attempts}): {e}; retrying in {delay:.3f}s",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            policy.sleep(delay)
+    raise last
+
+
+# -- save/restore --------------------------------------------------------------
+
+
 def _flatten(tree) -> tuple[list[tuple[str, np.ndarray]], Any]:
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = []
@@ -48,6 +136,11 @@ def _flatten(tree) -> tuple[list[tuple[str, np.ndarray]], Any]:
     return out, jax.tree.structure(tree)
 
 
+def array_checksum(arr: np.ndarray) -> int:
+    """CRC32 over an array's raw bytes (the manifest integrity record)."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
 def save_checkpoint(
     directory: str,
     step: int,
@@ -55,35 +148,53 @@ def save_checkpoint(
     extra: Optional[dict] = None,
     *,
     blocking: bool = True,
+    retry: Optional[RetryPolicy] = None,
+    fault_hook: Optional[Callable[[str], None]] = None,
 ) -> str:
     """Snapshot ``tree`` (any pytree of arrays) + ``extra`` metadata."""
     flat, _ = _flatten(tree)
     payload = {k: v for k, v in flat}
-    meta = {"step": int(step), "keys": list(payload.keys()), "extra": extra or {}}
+    meta = {
+        "step": int(step),
+        "keys": list(payload.keys()),
+        "checksums": {k: array_checksum(v) for k, v in payload.items()},
+        "extra": extra or {},
+    }
 
     def write():
         os.makedirs(directory, exist_ok=True)
         final = os.path.join(directory, f"step_{step}")
-        # Unique tmp dir per writer: concurrent saves of the same step never
-        # share a path (the old fixed ``step_<N>.tmp`` raced with itself).
-        tmp = tempfile.mkdtemp(
-            prefix=f"step_{step}.", suffix=".tmp", dir=directory
-        )
-        # mkdtemp creates 0700; restore umask-default perms so the renamed
-        # step_<N> dir stays readable by other users/services (as the old
-        # os.makedirs-based writer left it)
-        os.chmod(tmp, 0o777 & ~_UMASK)
-        try:
-            np.savez(os.path.join(tmp, "arrays.npz"), **payload)
-            with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
-                f.write(msgpack.packb(meta))
-            with _SWAP_LOCK:
-                if os.path.exists(final):
-                    shutil.rmtree(final)
-                os.rename(tmp, final)
-        except BaseException:
-            shutil.rmtree(tmp, ignore_errors=True)
-            raise
+
+        def attempt():
+            if fault_hook is not None:
+                fault_hook("write")
+            # Unique tmp dir per writer: concurrent saves of the same step
+            # never share a path (the old fixed ``step_<N>.tmp`` raced with
+            # itself), and a failed attempt's debris never blocks the retry.
+            tmp = tempfile.mkdtemp(
+                prefix=f"step_{step}.", suffix=".tmp", dir=directory
+            )
+            # mkdtemp creates 0700; restore umask-default perms so the
+            # renamed step_<N> dir stays readable by other users/services
+            # (as the old os.makedirs-based writer left it)
+            os.chmod(tmp, 0o777 & ~_UMASK)
+            try:
+                np.savez(os.path.join(tmp, "arrays.npz"), **payload)
+                with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+                    f.write(msgpack.packb(meta))
+                with _SWAP_LOCK:
+                    if os.path.exists(final):
+                        # keep the previous generation of this step: one
+                        # bad write must never destroy the last good state
+                        prev = final + ".prev"
+                        shutil.rmtree(prev, ignore_errors=True)
+                        os.rename(final, prev)
+                    os.rename(tmp, final)
+            except BaseException:
+                shutil.rmtree(tmp, ignore_errors=True)
+                raise
+
+        call_with_retry(attempt, retry, what=f"checkpoint write step_{step}")
 
     if blocking:
         write()
@@ -99,15 +210,61 @@ def wait_for_pending() -> None:
         _PENDING.pop().join()
 
 
+def _step_of(name: str) -> Optional[int]:
+    """step_<N> -> N; tmp dirs, .prev generations and junk -> None."""
+    if not name.startswith("step_") or name.endswith(".tmp"):
+        return None
+    try:
+        return int(name.split("_", 1)[1])
+    except ValueError:
+        return None
+
+
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None
     steps = [
-        int(name.split("_", 1)[1])
-        for name in os.listdir(directory)
-        if name.startswith("step_") and not name.endswith(".tmp")
+        s for s in (_step_of(name) for name in os.listdir(directory))
+        if s is not None
     ]
     return max(steps) if steps else None
+
+
+def generation_dirs(directory: str) -> list:
+    """Candidate checkpoint dirs, most recent first: every ``step_<N>``
+    in descending step order, each followed by its retained
+    ``step_<N>.prev`` generation.  The solve loader walks this list when
+    the newest generation turns out corrupt."""
+    if not os.path.isdir(directory):
+        return []
+    steps = sorted(
+        {
+            s for s in (_step_of(name) for name in os.listdir(directory))
+            if s is not None
+        },
+        reverse=True,
+    )
+    out = []
+    for s in steps:
+        p = os.path.join(directory, f"step_{s}")
+        if os.path.isdir(p):
+            out.append(p)
+        if os.path.isdir(p + ".prev"):
+            out.append(p + ".prev")
+    return out
+
+
+def verify_checksums(manifest: dict, arrays: dict, *, where: str) -> None:
+    """Compare loaded arrays against the manifest's CRC32 record; raises
+    ``ValueError`` naming the first mismatching array.  Manifests written
+    before checksums existed verify vacuously."""
+    sums = manifest.get("checksums") or {}
+    for key, expected in sums.items():
+        if key in arrays and array_checksum(arrays[key]) != expected:
+            raise ValueError(
+                f"checksum mismatch for array {key!r} in {where} — "
+                f"the checkpoint is corrupt (bit-rot or a torn write)"
+            )
 
 
 def restore_checkpoint(
@@ -115,6 +272,9 @@ def restore_checkpoint(
     template: Any,
     step: Optional[int] = None,
     shardings: Any = None,
+    *,
+    retry: Optional[RetryPolicy] = None,
+    fault_hook: Optional[Callable[[str], None]] = None,
 ):
     """Restore into the structure of ``template``.  ``shardings`` (optional)
     mirrors the template with jax.sharding.Sharding leaves — leaves are
@@ -126,9 +286,20 @@ def restore_checkpoint(
     if step is None:
         raise FileNotFoundError(f"no checkpoint under {directory}")
     path = os.path.join(directory, f"step_{step}")
-    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
-        meta = msgpack.unpackb(f.read())
-    arrays = np.load(os.path.join(path, "arrays.npz"))
+
+    def attempt():
+        if fault_hook is not None:
+            fault_hook("read")
+        with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+            meta = msgpack.unpackb(f.read())
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            raw = {k: z[k] for k in z.files}
+        return meta, raw
+
+    meta, raw = call_with_retry(
+        attempt, retry, what=f"checkpoint read step_{step}"
+    )
+    verify_checksums(meta, raw, where=path)
 
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(template)[0]
     treedef = jax.tree.structure(template)
@@ -140,7 +311,7 @@ def restore_checkpoint(
     restored = []
     for (path_elems, leaf), shard in zip(leaves_with_paths, shard_leaves):
         key = "/".join(str(p) for p in path_elems)
-        arr = arrays[key]
+        arr = raw[key]
         if hasattr(leaf, "dtype"):
             arr = arr.astype(leaf.dtype)
         restored.append(

@@ -17,6 +17,7 @@ accounting in benchmarks and in the roofline collective term.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
@@ -183,3 +184,53 @@ def make_codec(name: str, n: int, problem=None):
         problem.record_fields if problem is not None else DEFAULT_RECORD_FIELDS
     )
     return CODECS[name](n, fields)
+
+
+# -- payload integrity --------------------------------------------------------
+#
+# The cold tier and checkpoint store carry codec records through host memory
+# and disk, where corruption must be DETECTED, never propagated into the
+# search (a flipped mask bit silently changes the answer).  A record is
+# "checked" by appending one CRC32 word over its payload; CRC32 is linear,
+# so any single-bit flip — including one in the checksum word itself — is
+# always caught.  The checksum word is integrity metadata, not wire payload:
+# codec ``record_words`` / ``record_bytes`` (the paper's §4.3 byte
+# accounting) are unchanged.
+
+
+class PayloadCorruptionError(RuntimeError):
+    """A checked task record failed checksum verification."""
+
+
+def payload_checksum(words) -> int:
+    """CRC32 (as uint32) over a u32 word array's raw bytes."""
+    a = np.ascontiguousarray(np.asarray(words, dtype=np.uint32))
+    return zlib.crc32(a.tobytes()) & 0xFFFFFFFF
+
+
+def checked_record(rec: np.ndarray) -> np.ndarray:
+    """``rec`` (record_words,) -> (record_words + 1,) with a trailing
+    CRC32 word."""
+    rec = np.asarray(rec, dtype=np.uint32)
+    return np.concatenate(
+        [rec, np.array([payload_checksum(rec)], dtype=np.uint32)]
+    )
+
+
+def verify_record(rec: np.ndarray) -> bool:
+    """Does a checked record's trailing CRC32 word match its payload?"""
+    rec = np.asarray(rec, dtype=np.uint32)
+    return rec.size >= 1 and payload_checksum(rec[:-1]) == int(rec[-1])
+
+
+def strip_record(rec: np.ndarray) -> np.ndarray:
+    """Verify a checked record and return the bare payload words; raises
+    :class:`PayloadCorruptionError` on mismatch."""
+    rec = np.asarray(rec, dtype=np.uint32)
+    if not verify_record(rec):
+        raise PayloadCorruptionError(
+            f"task record failed checksum verification "
+            f"(got {int(rec[-1]) if rec.size else '<empty>'}, "
+            f"expected {payload_checksum(rec[:-1]) if rec.size else '?'})"
+        )
+    return rec[:-1]

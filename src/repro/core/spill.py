@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .encoding import Task
+from .encoding import Task, checked_record, strip_record, verify_record
 from .waiting_list import startup_assignment
 
 # depth-band granularity of the cold tier: records are stored FIFO inside a
@@ -121,8 +121,11 @@ class FrontierSpiller:
         lanes: int,
         donate_k: int,
         graph=None,
+        injector=None,
     ):
         self.codec = codec
+        self.injector = injector
+        self.delivery_retries = 0
         self.num_workers = num_workers
         self.low, self.high = resolve_watermarks(
             capacity,
@@ -157,15 +160,41 @@ class FrontierSpiller:
         return self.cold_tasks * self.codec.record_bytes
 
     # -- cold-tier store -------------------------------------------------------
+    #
+    # Records are stored CHECKED (codec payload + trailing CRC32 word, see
+    # core/encoding.py) and every host-memory hand-off — the encode/write
+    # into the cold tier and the pop/delivery back toward the hot frontier —
+    # goes through :meth:`_deliver`, so corruption of a delivery copy is
+    # detected by checksum and healed by redelivering from the intact
+    # source, never propagated into the search.
+
+    def _deliver(self, kind: str, rec: np.ndarray) -> np.ndarray:
+        """One checked-record hand-off, with optional fault injection.
+
+        The injector (if any) may corrupt the delivery COPY; verification
+        catches it and the intact source record is redelivered (booked as
+        one recovery + one retry)."""
+        if self.injector is None:
+            return rec
+        delivered, injected = self.injector.corrupt(kind, rec)
+        if injected and not verify_record(delivered):
+            self.injector.note_recovered(kind)
+            self.injector.note_retry()
+            self.delivery_retries += 1
+            return rec
+        return delivered
 
     def _push_cold(self, w: int, mask, sol, depth: int) -> None:
-        rec = self._encode(
-            Task(
-                mask=np.asarray(mask, np.uint32),
-                sol_mask=np.asarray(sol, np.uint32),
-                depth=int(depth),
+        rec = checked_record(
+            self._encode(
+                Task(
+                    mask=np.asarray(mask, np.uint32),
+                    sol_mask=np.asarray(sol, np.uint32),
+                    depth=int(depth),
+                )
             )
         )
+        rec = self._deliver("cold_corrupt", rec)
         self._bands[w].setdefault(int(depth) // BAND_WIDTH, []).append(rec)
         self.spilled_total += 1
         self.cold_tasks += 1
@@ -173,7 +202,8 @@ class FrontierSpiller:
 
     def _pop_band(self, w: int, band: int) -> np.ndarray:
         fifo = self._bands[w][band]
-        rec = fifo.pop(0)
+        rec = self._deliver("transfer_corrupt", fifo[0])
+        fifo.pop(0)
         if not fifo:
             del self._bands[w][band]
         self.cold_tasks -= 1
@@ -192,7 +222,7 @@ class FrontierSpiller:
             rec = self._pop_band(donor, best)
         else:
             return None
-        return self.codec.decode(rec, self._graph)
+        return self.codec.decode(strip_record(rec), self._graph)
 
     # -- the pump --------------------------------------------------------------
 
@@ -280,10 +310,11 @@ class FrontierSpiller:
 
     def to_flat(self, prefix: str = "spill") -> dict:
         """The cold tier as named uint32/int64 arrays (checkpoint leaves):
-        one ``(N_w, record_words)`` block per worker, band-major FIFO order,
-        plus a counters vector."""
+        one ``(N_w, record_words + 1)`` block per worker (records travel
+        CHECKED — payload plus CRC32 word), band-major FIFO order, plus a
+        counters vector."""
         flat = {}
-        rw = self.codec.record_words
+        rw = self.codec.record_words + 1
         for w in range(self.num_workers):
             recs = [
                 rec
@@ -308,21 +339,30 @@ class FrontierSpiller:
     def load_flat(self, flat: dict, prefix: str = "spill") -> None:
         """Rebuild the cold tier from :meth:`to_flat` arrays.  Records are
         re-banded by their decoded depth; band-major FIFO storage order makes
-        the rebuild exact, so a resumed solve replays bit-identically."""
+        the rebuild exact, so a resumed solve replays bit-identically.
+
+        Each record's CRC32 word is re-verified on load (raising
+        :class:`~repro.core.encoding.PayloadCorruptionError` on rot — the
+        checkpoint loader turns that into a fall-back to the previous good
+        generation); bare pre-checksum blocks are accepted and upgraded."""
         counters = np.asarray(flat[f"{prefix}.counters"])
         self.spilled_total = int(counters[0])
         self.readmitted_total = int(counters[1])
         self.cold_bytes_peak = int(counters[2])
         self._bands = [dict() for _ in range(self.num_workers)]
         self.cold_tasks = 0
+        rw = self.codec.record_words
         for w in range(self.num_workers):
             for rec in np.asarray(flat[f"{prefix}.w{w}"], np.uint32):
-                depth = self.codec.decode(rec, self._graph).depth
+                if rec.size == rw:          # legacy bare record
+                    rec = checked_record(rec)
+                depth = self.codec.decode(strip_record(rec), self._graph).depth
                 self._bands[w].setdefault(depth // BAND_WIDTH, []).append(rec)
                 self.cold_tasks += 1
 
 
-def make_spiller(cfg, problem, graph, capacity: int, num_workers: int):
+def make_spiller(cfg, problem, graph, capacity: int, num_workers: int,
+                 injector=None):
     """Build a :class:`FrontierSpiller` from a SolveConfig — the one shared
     constructor for the solo, batched, and service drivers (all three must
     agree on the eviction/re-admission contract, so they all come here)."""
@@ -339,4 +379,5 @@ def make_spiller(cfg, problem, graph, capacity: int, num_workers: int):
         lanes=cfg.lanes,
         donate_k=cfg.donate_k,
         graph=graph,
+        injector=injector,
     )

@@ -826,6 +826,39 @@ def lane_swap_in(
     )
 
 
+# the stall write-back, jitted like _swap_in_dev: restore one lane's worker
+# state AND its done/rounds flags exactly as sliced (no swap-in resets).
+# Used to freeze a stalled lane across a chunk — the plane steps it, then
+# the snapshot is written back so the lane observably made no progress —
+# without touching the compiled plane (traced lane index, shared executable).
+@jax.jit
+def _write_back_dev(worker_full, worker_one, done_full, done_one,
+                    rounds_full, rounds_one, lane):
+    return (
+        jax.tree.map(
+            lambda full, one: full.at[lane].set(one), worker_full, worker_one
+        ),
+        done_full.at[lane].set(done_one),
+        rounds_full.at[lane].set(rounds_one),
+    )
+
+
+def lane_write_back(
+    lanes: LaneState, lane: int, worker: WorkerState, done, rounds
+) -> LaneState:
+    """Overwrite one lane with a previously sliced snapshot: the (P, ...)
+    ``worker`` state plus the exact ``done`` flag and ``rounds`` counter
+    (contrast :func:`lane_swap_in`, which resets both).  The tag is
+    untouched — the occupant never changed."""
+    new_worker, new_done, new_rounds = _write_back_dev(
+        lanes.worker, worker, lanes.done, jnp.asarray(done, bool),
+        lanes.rounds, jnp.asarray(rounds, jnp.int32), jnp.int32(lane)
+    )
+    return lanes._replace(
+        worker=new_worker, done=new_done, rounds=new_rounds
+    )
+
+
 _retire_dev = jax.jit(lambda done, lane: done.at[lane].set(True))
 _resume_dev = jax.jit(lambda done, lane: done.at[lane].set(False))
 

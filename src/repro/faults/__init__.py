@@ -1,0 +1,24 @@
+"""``repro.faults`` — deterministic fault injection for the solve plane.
+
+The center tracks every worker's placement with a few bits (the paper's
+semi-centralized bookkeeping); this package turns that into a tested
+recovery story.  :class:`FaultPlan` is a seeded schedule of faults keyed
+on chunk-boundary indices (never wall clock); :class:`FaultInjector`
+fires it against a live solve through host-boundary hooks in
+``api/backends.py`` / ``api/service.py`` / ``core/spill.py`` /
+``checkpoint/store.py`` and keeps the injected/recovered/retries ledger
+surfaced in :class:`repro.api.ServiceStats`.
+
+Quickstart::
+
+    from repro.faults import FaultInjector, FaultPlan
+
+    inj = FaultInjector(FaultPlan.random(seed=0, n_events=6))
+    r = session.solve(g, injector=inj)        # same answer, faults healed
+    inj.report()   # {'injected': {...}, 'recovered': {...}, 'retries': N}
+"""
+
+from repro.faults.injector import FaultInjector
+from repro.faults.plan import FAULT_KINDS, FaultEvent, FaultPlan
+
+__all__ = ["FAULT_KINDS", "FaultEvent", "FaultInjector", "FaultPlan"]

@@ -209,6 +209,14 @@ def main():
                     help="resume a checkpointed solve (dir or step_N subdir); "
                          "problem/config/graphs come from the checkpoint, "
                          "explicit flags override non-trajectory knobs")
+    ap.add_argument("--chaos", type=int, default=None, metavar="N",
+                    help="deterministic fault injection (spmd): fire N "
+                         "random faults from repro.faults (lane crashes, "
+                         "stalls, payload corruption, checkpoint I/O "
+                         "errors) and self-heal — results stay "
+                         "bit-identical to a fault-free run")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the --chaos fault plan (default 0)")
     args = ap.parse_args()
 
     if args.resume:
@@ -236,6 +244,20 @@ def main():
 
     session = SolverSession(problem=spec, backend=backend, config=cfg)
 
+    injector = None
+    if args.chaos is not None:
+        if backend.name != "spmd":
+            raise SystemExit("--chaos needs the spmd engine")
+        from repro.faults import FaultInjector, FaultPlan
+
+        plan = FaultPlan.random(
+            args.chaos_seed, n_events=args.chaos, lanes=cfg.lanes
+        )
+        injector = FaultInjector(plan)
+        print(f"[solve] chaos: {args.chaos} seeded fault(s) "
+              f"(seed {args.chaos_seed}): {plan.counts()}")
+    extra = {"injector": injector} if injector is not None else {}
+
     batch_graphs, batch_labels = build_graphs(args)
     if batch_graphs:
         if cfg.use_mesh:
@@ -246,7 +268,7 @@ def main():
         print(f"[solve] batch of {len(batch_graphs)} instances "
               f"[{spec.name}] on {backend.name}, "
               f"workers/instance={cfg.num_workers}")
-        res = session.solve_many(batch_graphs)
+        res = session.solve_many(batch_graphs, **extra)
         for label, r in zip(batch_labels, res.results):
             print(f"[solve]   {label}: best={r.best_size} rounds={r.rounds} "
                   f"nodes={r.nodes_expanded} transfers={r.tasks_transferred}")
@@ -255,12 +277,14 @@ def main():
               f"({len(batch_graphs) / max(res.wall_s, 1e-9):.2f} inst/s), "
               f"{len(res.buckets)} bucket(s), {res.compactions} "
               f"compaction(s); cache: {session.cache_stats()}")
+        if injector is not None:
+            print(f"[solve] chaos report: {injector.report()}")
         return
 
     g = build_graph(args)
     print(f"[solve] graph n={g.n} m={g.num_edges} engine={backend.name} "
           f"problem={spec.name}")
-    r = session.solve(g)
+    r = session.solve(g, **extra)
     line = (f"[solve] best={r.best_size} rounds={r.rounds} "
             f"nodes={r.nodes_expanded} transfers={r.tasks_transferred} "
             f"wall={r.wall_s:.2f}s")
@@ -284,6 +308,8 @@ def main():
                     f" failed_requests={s.failed_requests}"
                     if backend.name == "protocol_sim" else ""))
     print(line)
+    if injector is not None:
+        print(f"[solve] chaos report: {injector.report()}")
 
 
 if __name__ == "__main__":

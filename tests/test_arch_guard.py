@@ -142,6 +142,7 @@ PUBLIC_API = [
     "SolveResult",
     "SolveService",
     "SolveStats",
+    "SolveTimeout",
     "SolverSession",
     "get_backend",
     "known_backends",
@@ -186,6 +187,7 @@ SOLVE_CONFIG_FIELDS = [
     "explore_impl",
     "frontier_spill",
     "k",
+    "lane_stall_chunks",
     "lanes",
     "latency",
     "max_rounds",
@@ -195,6 +197,7 @@ SOLVE_CONFIG_FIELDS = [
     "packed_status",
     "policy",
     "queue_cap_per_p",
+    "request_timeout_s",
     "resume_from",
     "seed",
     "send_metadata",
@@ -257,9 +260,13 @@ SOLVE_STATS_FIELDS = [
 ]
 SERVICE_STATS_FIELDS = [
     "deadline_hit",
+    "faults_injected",
+    "faults_recovered",
     "lane",
+    "lanes_quarantined",
     "plane",
     "residency_s",
+    "retries",
     "wait_s",
     "wall_deadline_hit",
 ]
